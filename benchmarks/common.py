@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: scan-driven MGD training with early stopping."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.data import tasks
+from repro.data.pipeline import dataset_sampler
+from repro.models.simple import mlp_apply, mlp_init
+
+
+def train_until(loss_fn, params, cfg: MGDConfig, sample_fn, *,
+                max_steps: int, threshold_fn: Callable,
+                chunk: int = 2000):
+    """Run MGD in jitted chunks until threshold_fn(params) or budget.
+
+    Returns (params, steps_used, solved).
+    """
+    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn)
+    state = mgd_init(params, cfg)
+    steps = 0
+    while steps < max_steps:
+        params, state, _ = run(params, state)
+        steps += chunk
+        if threshold_fn(params):
+            return params, steps, True
+    return params, steps, False
+
+
+def xor_mse(params):
+    x, y = tasks.xor_dataset()
+    return float(mse(mlp_apply(params, x), y))
+
+
+def xor_setup(seed: int):
+    x, y = tasks.xor_dataset()
+    params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])  # noqa: E731
+    return params, loss_fn, dataset_sampler(x, y, 1)
+
+
+def time_to_solve_xor(cfg: MGDConfig, seed: int, max_steps=60000,
+                      chunk=2000):
+    params, loss_fn, sample_fn = xor_setup(seed)
+    _, steps, solved = train_until(
+        loss_fn, params, cfg, sample_fn, max_steps=max_steps,
+        threshold_fn=lambda p: xor_mse(p) < 0.04, chunk=chunk)
+    return steps if solved else None
+
+
+def median(vals):
+    vals = sorted(vals)
+    return vals[len(vals) // 2] if vals else None

@@ -1,0 +1,50 @@
+"""Paper Fig. 6: effect of τ_θ on XOR training time at fixed batch size.
+
+(a) fixed η: batch-1 training slows with τ_θ, batch-4 barely changes;
+(b) the max-η sweep is approximated with a coarse grid per τ_θ.
+"""
+from __future__ import annotations
+
+from repro.core import MGDConfig
+
+from .common import median, time_to_solve_xor
+
+N_SEEDS = 3
+TAUS = (1, 4, 16)
+
+
+def run():
+    rows = []
+    # (a) fixed low eta, batch 1 (tau_x = tau_theta) vs batch 4
+    for batch in (1, 4):
+        for tau in TAUS:
+            tau_x = tau if batch == 1 else max(1, tau // 4)
+            cfg = MGDConfig(dtheta=1e-2, eta=0.5, tau_theta=tau,
+                            tau_x=tau_x)
+            times = [time_to_solve_xor(cfg, s, max_steps=80000,
+                                       chunk=4000)
+                     for s in range(N_SEEDS)]
+            solved = [t for t in times if t is not None]
+            rows.append({
+                "bench": "fig6", "name": f"batch{batch}_tau{tau}_steps",
+                "value": median(solved) if solved else -1,
+                "detail": f"{len(solved)}/{N_SEEDS} solved, fixed eta=0.5",
+            })
+    # (b) max-eta per tau (coarse grid)
+    for tau in TAUS:
+        best = None
+        for eta in (8.0, 4.0, 2.0, 1.0, 0.5):
+            cfg = MGDConfig(dtheta=1e-2, eta=eta, tau_theta=tau, tau_x=tau)
+            times = [time_to_solve_xor(cfg, s, max_steps=40000, chunk=2000)
+                     for s in range(N_SEEDS)]
+            solved = [t for t in times if t is not None]
+            if len(solved) * 2 > N_SEEDS:       # >50% convergence
+                best = (eta, median(solved))
+                break
+        rows.append({
+            "bench": "fig6", "name": f"max_eta_tau{tau}",
+            "value": best[0] if best else -1,
+            "detail": f"min median steps {best[1] if best else 'n/a'}; "
+                      "paper: max-eta falls as tau_theta grows",
+        })
+    return rows

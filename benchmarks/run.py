@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--only fig4,table2]`` runs each benchmark,
+prints a CSV (bench,name,value,detail) and writes artifacts/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "fig4_equivalence",
+    "fig5_angle",
+    "fig6_tau_theta",
+    "fig7_perturbations",
+    "fig8_noise",
+    "table2_datasets",
+    "table3_hardware",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark name substrings")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    selected = BENCHES
+    if args.only:
+        keys = args.only.split(",")
+        selected = [b for b in BENCHES if any(k in b for k in keys)]
+
+    os.makedirs(args.out, exist_ok=True)
+    print("bench,name,value,detail")
+    failures = []
+    for name in selected:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:    # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc(limit=5, file=sys.stderr)
+            continue
+        dt = time.time() - t0
+        for r in rows:
+            detail = str(r.get("detail", "")).replace(",", ";")
+            print(f"{r['bench']},{r['name']},{r['value']},{detail}")
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump({"rows": rows, "seconds": dt}, f, indent=1)
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Paper Table 2: MGD vs backprop accuracy on the four tasks.
+
+Offline container → Fashion-MNIST/CIFAR-10 are procedural stand-ins of
+identical shape (DESIGN.md §Honest limitations): the claim validated is
+the MGD-vs-backprop gap ON THE SAME DATA at matched budgets, not absolute
+paper accuracies.
+
+Hyperparameter note (EXPERIMENTS.md §Paper): the paper's Table-2 η values
+(5/3/9) presume an unstated Δθ — η only enters MGD through η·C̃/Δθ², so
+absolute η is meaningless without it.  We recalibrate per task at the
+SPSA-stability limit η ≲ 2/(λP) with the probe Δθ well below each
+network's weight scale, and report the calibration next to each row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.data import tasks
+from repro.data.pipeline import dataset_sampler, generator_sampler
+from repro.models.simple import (cifar_cnn_apply, cifar_cnn_init,
+                                 fashion_cnn_apply, fashion_cnn_init,
+                                 mlp_apply, mlp_init)
+from repro.training.train_loop import train_backprop
+
+
+def _acc(apply_fn, params, x, y):
+    return float(jnp.mean((jnp.argmax(apply_fn(params, x), -1)
+                           == jnp.argmax(y, -1)).astype(jnp.float32)))
+
+
+def _mse_loss(apply_fn):
+    def loss(p, b):
+        return mse(apply_fn(p, b["x"]), b["y"])
+    return loss
+
+
+def _train_mgd(loss_fn, params, cfg, sample_fn, steps, chunk):
+    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn)
+    state = mgd_init(params, cfg)
+    for _ in range(max(1, steps // chunk)):
+        params, state, _ = run(params, state)
+    return params
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # --- XOR (paper: 100% at 1e4 steps) ---
+    x, y = tasks.xor_dataset()
+    loss = _mse_loss(mlp_apply)
+    p = mlp_init(jax.random.PRNGKey(2), (2, 2, 1))
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=0)
+    p = _train_mgd(loss, p, cfg, dataset_sampler(x, y, 1), 10000, 2000)
+    rows.append({"bench": "table2", "name": "xor_mgd_1e4_solved",
+                 "value": float(float(mse(mlp_apply(p, x), y)) < 0.04),
+                 "detail": "paper: 100% (eta=1, dtheta=1e-2 calibrated)"})
+
+    # --- NIST7x7 (paper: 38% @1e4, 81% @1e5) ---
+    p = mlp_init(jax.random.PRNGKey(2), (49, 4, 4))
+    cfg = MGDConfig(dtheta=1e-2, eta=0.1, seed=1)
+    sample = generator_sampler(tasks.nist7x7_batch, 1, seed=7)
+    xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
+    loss = _mse_loss(mlp_apply)
+    p = _train_mgd(loss, p, cfg, sample, 10000, 5000)
+    rows.append({"bench": "table2", "name": "nist7x7_mgd_1e4_acc",
+                 "value": _acc(mlp_apply, p, xe, ye),
+                 "detail": "paper 38% @1e4 (eta=0.1)"})
+    p = _train_mgd(loss, p, cfg, sample, 90000, 15000)
+    rows.append({"bench": "table2", "name": "nist7x7_mgd_1e5_acc",
+                 "value": _acc(mlp_apply, p, xe, ye),
+                 "detail": "paper 81% @1e5"})
+    pb = mlp_init(jax.random.PRNGKey(2), (49, 4, 4))
+    res = train_backprop(loss, pb,
+                         generator_sampler(tasks.nist7x7_batch, 32, seed=7),
+                         3000, eta=1.0, log=None)
+    rows.append({"bench": "table2", "name": "nist7x7_backprop_acc",
+                 "value": _acc(mlp_apply, res.params, xe, ye),
+                 "detail": "paper 99.8%"})
+
+    # --- Fashion-MNIST stand-in CNN (paper: 34.2% @1e4, 88.6% backprop) ---
+    loss = _mse_loss(fashion_cnn_apply)
+    p = fashion_cnn_init(key)
+    nparams = sum(int(v.size) for v in jax.tree_util.tree_leaves(p))
+    cfg = MGDConfig(dtheta=1e-3, eta=1e-4, seed=1)
+    sample = generator_sampler(tasks.fashion_batch, 64, seed=3)
+    p = _train_mgd(loss, p, cfg, sample, 8000, 2000)
+    xe, ye = tasks.fashion_batch(jax.random.PRNGKey(98), 512)
+    rows.append({"bench": "table2", "name": "fashion_cnn_params",
+                 "value": nparams,
+                 "detail": "paper 14378 (head wiring ambiguity documented)"})
+    rows.append({"bench": "table2", "name": "fashion_mgd_8e3_acc",
+                 "value": _acc(fashion_cnn_apply, p, xe, ye),
+                 "detail": "paper 34.2% @1e4 (procedural stand-in; "
+                           "eta=1e-4 dtheta=1e-3 batch 64)"})
+    pb = fashion_cnn_init(key)
+    res = train_backprop(loss, pb, sample, 400, eta=0.02, chunk=200,
+                         log=None)
+    rows.append({"bench": "table2", "name": "fashion_backprop_acc",
+                 "value": _acc(fashion_cnn_apply, res.params, xe, ye),
+                 "detail": "paper 88.6%; same data/arch as the MGD row"})
+
+    # --- CIFAR-10 stand-in CNN (paper 26154 params; 12% @1e4) ---
+    loss = _mse_loss(cifar_cnn_apply)
+    p = cifar_cnn_init(key)
+    nparams = sum(int(v.size) for v in jax.tree_util.tree_leaves(p))
+    cfg = MGDConfig(dtheta=1e-3, eta=5e-5, seed=1)
+    sample = generator_sampler(tasks.cifar_batch, 64, seed=4)
+    p = _train_mgd(loss, p, cfg, sample, 6000, 2000)
+    xe, ye = tasks.cifar_batch(jax.random.PRNGKey(97), 512)
+    rows.append({"bench": "table2", "name": "cifar_cnn_params",
+                 "value": nparams, "detail": "paper 26154"})
+    rows.append({"bench": "table2", "name": "cifar_mgd_6e3_acc",
+                 "value": _acc(cifar_cnn_apply, p, xe, ye),
+                 "detail": "paper 12% @1e4 (procedural stand-in)"})
+    pb = cifar_cnn_init(key)
+    res = train_backprop(loss, pb, sample, 400, eta=0.02, chunk=200,
+                         log=None)
+    rows.append({"bench": "table2", "name": "cifar_backprop_acc",
+                 "value": _acc(cifar_cnn_apply, res.params, xe, ye),
+                 "detail": "paper 68%; same data/arch"})
+    return rows

@@ -1,0 +1,67 @@
+"""Architecture registry: the 10 assigned configs + input shapes.
+
+``get_config(name)`` / ``get_smoke_config(name)`` resolve an --arch id;
+``SHAPES`` carries the assigned input-shape set; ``runnable_cells()``
+enumerates the 40 assigned (arch × shape) cells, marking the long_500k
+skips for pure full-attention architectures (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+ARCH_IDS = [
+    "rwkv6-7b",
+    "qwen2-vl-2b",
+    "mistral-nemo-12b",
+    "qwen3-14b",
+    "granite-34b",
+    "qwen2-72b",
+    "deepseek-v3-671b",
+    "llama4-scout-17b-a16e",
+    "musicgen-medium",
+    "zamba2-7b",
+]
+
+
+def _module(name: str):
+    return importlib.import_module(
+        f"repro.configs.{name.replace('-', '_')}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# architectures with sub-quadratic sequence handling run long_500k
+LONG_CONTEXT_OK = {"rwkv6-7b", "zamba2-7b"}
+
+
+def runnable_cells() -> List[Tuple[str, str, bool]]:
+    """All 40 assigned cells as (arch, shape, runnable)."""
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            runnable = shape != "long_500k" or arch in LONG_CONTEXT_OK
+            cells.append((arch, shape, runnable))
+    return cells

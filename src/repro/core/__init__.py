@@ -1,0 +1,12 @@
+"""MGD core — the paper's contribution as a composable JAX module."""
+from .mgd import MGDConfig, MGDState, mgd_init, make_mgd_step, make_mgd_epoch
+from .analog import AnalogMGDConfig, AnalogMGDState, analog_init, make_analog_step
+from .cost import mse, softmax_xent, COSTS
+from . import perturbations, noise, forward_grad, utils
+
+__all__ = [
+    "MGDConfig", "MGDState", "mgd_init", "make_mgd_step", "make_mgd_epoch",
+    "AnalogMGDConfig", "AnalogMGDState", "analog_init", "make_analog_step",
+    "mse", "softmax_xent", "COSTS",
+    "perturbations", "noise", "forward_grad", "utils",
+]

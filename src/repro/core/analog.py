@@ -1,0 +1,111 @@
+"""Continuous-time MGD — the paper's Algorithm 2 (analog hardware).
+
+Discretized with timestep ``dt``:
+
+    C̃(t)  ← α_hp · (C̃(t−dt) + C(t) − C(t−dt))        α_hp = τ_hp/(τ_hp+dt)
+    e(t)  ← C̃(t)·θ̃(t)·dt/Δθ²
+    G(t)  ← (dt/(τ_θ+dt)) · (e(t) + (τ_θ/dt)·G(t−dt))   (single-pole lowpass)
+    θ     ← θ − η·G(t)                                   (continuous update)
+
+Unlike Algorithm 1 there is no discrete parameter-update event and no C₀
+memory — the highpass filter at the cost output plays the role of the
+baseline subtraction, and the per-parameter lowpass plays the role of the
+gradient integrator.  Default perturbations are sinusoidal (frequency
+multiplexing); any family works.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import perturbations as pert
+from .utils import tree_add, tree_axpy, tree_scale, tree_zeros_like
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogMGDConfig:
+    """Continuous MGD constants.
+
+    Stability (paper §4.2): parameter drift per perturbation period must stay
+    well below the perturbation amplitude, i.e. η·|G|·dt ≪ Δθ — "if η is too
+    large, rapid changes in θ generate unwanted frequency components that mix
+    with the perturbation input".  The defaults sit inside that regime for
+    O(1)-curvature costs.
+    """
+
+    ptype: str = "sinusoidal"
+    dtheta: float = 1e-2
+    eta: float = 1e-3
+    tau_theta: float = 10.0   # lowpass (gradient-integration) time constant
+    tau_hp: float = 100.0     # highpass (baseline-removal) time constant
+    tau_p: int = 1            # perturbation bandwidth control (1/Δf)
+    dt: float = 1.0
+    seed: int = 0
+    cost_noise: float = 0.0
+
+
+class AnalogMGDState(NamedTuple):
+    t: jnp.ndarray          # int32 tick counter (time = t·dt)
+    c_prev: jnp.ndarray     # C(t−dt)
+    c_tilde: jnp.ndarray    # highpass output C̃(t−dt)
+    g: Pytree               # lowpass gradient estimate
+    primed: jnp.ndarray     # bool — first tick initializes c_prev only
+
+
+def analog_init(params: Pytree, cfg: AnalogMGDConfig) -> AnalogMGDState:
+    return AnalogMGDState(
+        t=jnp.zeros((), jnp.int32),
+        c_prev=jnp.zeros((), jnp.float32),
+        c_tilde=jnp.zeros((), jnp.float32),
+        g=tree_zeros_like(params, jnp.float32),
+        primed=jnp.zeros((), jnp.bool_),
+    )
+
+
+def make_analog_step(
+    loss_fn: Callable[[Pytree, Any], jnp.ndarray],
+    cfg: AnalogMGDConfig,
+    total_params: Optional[int] = None,
+):
+    """One dt tick of Algorithm 2.  Returns step_fn(params, state, batch)."""
+    inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
+    a_hp = cfg.tau_hp / (cfg.tau_hp + cfg.dt)
+    # G(t) = (dt·e(t)/dt + τ_θ·G)/(τ_θ+dt) — from Alg. 2 line 10
+    a_g_new = cfg.dt / (cfg.tau_theta + cfg.dt)
+    a_g_old = cfg.tau_theta / (cfg.tau_theta + cfg.dt)
+
+    def step_fn(params, state: AnalogMGDState, batch):
+        t = state.t
+        theta_t = pert.generate(
+            params, ptype=cfg.ptype, step=t, seed=cfg.seed,
+            dtheta=cfg.dtheta, tau_p=cfg.tau_p, total=total_params,
+        )
+        c = loss_fn(tree_add(params, theta_t), batch).astype(jnp.float32)
+        if cfg.cost_noise:
+            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xA7A), t)
+            c = c + cfg.cost_noise * jax.random.normal(key, (), jnp.float32)
+        # first tick: prime the filter memory, no update
+        c_prev = jnp.where(state.primed, state.c_prev, c)
+        c_tilde = a_hp * (state.c_tilde + c - c_prev)
+        # e(t) = C̃·θ̃·dt/Δθ²;  G ← a_new·(e/dt·… ) per Alg. 2:
+        # G(t) = dt/(τθ+dt)·(e(t) + τθ/dt·G(t−dt)), e already carries dt
+        e_coef = c_tilde * cfg.dt * inv_d2
+        g = jax.tree_util.tree_map(
+            lambda gi, pi: a_g_new * (e_coef / cfg.dt)
+            * pi.astype(jnp.float32) + a_g_old * gi,
+            state.g, theta_t,
+        )
+        new_params = tree_axpy(-cfg.eta, g, params)
+        new_state = AnalogMGDState(
+            t=t + 1, c_prev=c, c_tilde=c_tilde, g=g,
+            primed=jnp.ones((), jnp.bool_),
+        )
+        metrics = {"cost": c, "c_tilde": c_tilde}
+        return new_params, new_state, metrics
+
+    return step_fn

@@ -1,0 +1,30 @@
+"""Cost functions.
+
+The paper uses MSE throughout (no softmax, §3.6).  LM-scale configs use the
+standard softmax cross-entropy.  All costs reduce to a single scalar — in MGD
+that scalar *is* the entire feedback channel, so under pjit the only
+gradient-path collective is the psum XLA inserts for this reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mse(y, y_hat):
+    """Mean squared error over all elements (paper's cost)."""
+    d = y.astype(jnp.float32) - y_hat.astype(jnp.float32)
+    return jnp.mean(d * d)
+
+
+def softmax_xent(logits, labels, ignore_id=-1):
+    """Token-mean softmax cross entropy; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+COSTS = {"mse": mse, "xent": softmax_xent}

@@ -1,0 +1,360 @@
+"""Multiplexed gradient descent — discrete algorithm (paper Algorithm 1).
+
+The MGD step is *model-free*: it consumes only a scalar-valued
+``loss_fn(params, batch) -> cost`` plus the three time constants
+(τ_p, τ_θ, τ_x) and a perturbation family.  One MGD iteration is:
+
+    1. (re)generate the perturbation θ̃ for this step            [τ_p]
+    2. refresh the baseline cost C₀ if the sample or params
+       changed (forward mode), or probe ±θ̃ (central mode)       [τ_x]
+    3. C̃ ← C(θ+θ̃) − C₀        (the only feedback — ONE SCALAR)
+    4. e ← C̃·θ̃/Δθ²;  G ← G + e   (local homodyne accumulation)
+    5. every τ_θ: θ ← θ − ηG;  G ← 0                            [τ_θ]
+
+Everything is implemented with ``lax`` control flow so the whole step jits,
+lowers, and GSPMD-partitions; under pjit the only gradient-path collective
+is the psum XLA inserts for the scalar cost reduction.
+
+Paper-faithful mode is ``mode="forward"`` with ``replay=False`` and
+``probes=1``.  Beyond-paper extensions (recorded separately in
+EXPERIMENTS.md §Perf):
+
+* ``mode="central"``  — antithetic probe C(θ+θ̃)−C(θ−θ̃): O(Δθ²) bias and no
+  C₀ refresh pass (same 2-forward budget as forward mode at τ_x=1).
+* ``replay=True``     — scalar-replay memory: instead of the O(P) gradient
+  accumulator G the paper requires when τ_θ > τ_p, store only the τ_θ-window
+  of C̃ scalars and regenerate θ̃ at update time.  O(1) optimizer memory.
+* ``probes=k``        — k independent perturbation vectors per step,
+  averaged.  Variance ∝ 1/k; at pod scale the probe axis maps onto the mesh
+  (see ``probe_parallel``) with only k scalars crossing the interconnect.
+* ``momentum``        — classical heavy-ball on G (the paper notes MGD "is
+  capable of implementing" momentum; we provide it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import perturbations as pert
+from .utils import (
+    tree_add,
+    tree_axpy,
+    tree_scale,
+    tree_select,
+    tree_size,
+    tree_zeros_like,
+)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Config / state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MGDConfig:
+    """Static configuration of the MGD optimizer (hashable → jit-static).
+
+    Attributes mirror the paper's Table 1 plus framework extensions.
+    """
+
+    # perturbation family: rademacher | walsh | sequential | sinusoidal
+    ptype: str = "rademacher"
+    dtheta: float = 1e-3          # Δθ, perturbation amplitude
+    eta: float = 1e-2             # η, learning rate
+    tau_p: int = 1                # perturbation time constant
+    tau_theta: int = 1            # parameter-update (gradient-integration) time
+    tau_x: int = 1                # input-sample change time (driver-enforced)
+    mode: str = "forward"         # forward (paper) | central (beyond-paper)
+    replay: bool = False          # scalar-replay O(1)-memory updates
+    probes: int = 1               # probe-averaging count
+    probe_impl: str = "map"       # map (sequential) | vmap (parallel/shardable)
+    momentum: float = 0.0         # heavy-ball coefficient on G
+    seed: int = 0
+    # hardware noise emulation (paper §3.5)
+    cost_noise: float = 0.0       # σ_C  — gaussian noise added to every cost read
+    update_noise: float = 0.0     # σ_θ  — update noise, std σ_θ·Δθ (see noise.py)
+    # bounded-staleness feedback: the update at step n may consume C̃ from
+    # step n-d (straggler tolerance; 0 = synchronous paper behaviour)
+    staleness: int = 0
+
+    def __post_init__(self):
+        if self.ptype not in pert.PERTURBATION_TYPES:
+            raise ValueError(f"unknown perturbation type {self.ptype!r}")
+        if self.mode not in ("forward", "central"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.replay and self.ptype == "sinusoidal" and self.tau_theta > 256:
+            # replay regenerates θ̃ for each window step — fine for codes,
+            # wasteful for long analog windows.
+            raise ValueError("replay mode with sinusoidal ptype and large "
+                             "tau_theta: use the analog algorithm instead")
+        if self.staleness and not self.replay:
+            raise ValueError("bounded-staleness feedback requires replay mode "
+                             "(the C̃ window is what absorbs the delay)")
+
+
+class MGDState(NamedTuple):
+    """Carried optimizer state.  Structure is fixed per MGDConfig."""
+
+    step: jnp.ndarray                 # int32 global iteration counter n
+    c0: jnp.ndarray                   # f32 baseline cost C₀ (forward mode)
+    g: Optional[Pytree]               # gradient accumulator (None in replay)
+    replay_c: Optional[jnp.ndarray]   # f32[tau_theta + staleness] C̃ window
+    m: Optional[Pytree]               # momentum buffer (None if momentum==0)
+    metric_cost: jnp.ndarray          # f32 last unperturbed-ish cost (telemetry)
+
+
+def mgd_init(params: Pytree, cfg: MGDConfig) -> MGDState:
+    """Fresh optimizer state for ``params`` under ``cfg``.
+
+    Works with concrete arrays *or* ShapeDtypeStructs (dry-run safe) —
+    buffers are created with ``jnp.zeros`` from shape/dtype only.
+    τ_θ = 1 needs no gradient accumulator at all (the update consumes the
+    error signal immediately — paper §4.2's "only a single additional
+    memory element is required"); at deepseek scale the f32 G buffer would
+    be 10.5 GiB/device, so this is a fits-in-HBM matter, not a nicety.
+    """
+    g = (None if (cfg.replay or cfg.tau_theta == 1)
+         else tree_zeros_like(params, jnp.float32))
+    window = cfg.tau_theta + cfg.staleness
+    replay_c = jnp.zeros((window,), jnp.float32) if cfg.replay else None
+    m = tree_zeros_like(params, jnp.float32) if cfg.momentum else None
+    return MGDState(
+        step=jnp.zeros((), jnp.int32),
+        c0=jnp.zeros((), jnp.float32),
+        g=g,
+        replay_c=replay_c,
+        m=m,
+        metric_cost=jnp.zeros((), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Noise helpers (counter-based, deterministic across restarts)
+# ---------------------------------------------------------------------------
+
+
+def _gauss_noise(seed, step, tag, shape=()):
+    """Standard-normal noise from a counter-based key — no threaded PRNG
+    state, so checkpoint/restart replays the identical noise sequence."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    key = jax.random.fold_in(key, step)
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _noisy(cost, cfg: MGDConfig, step, tag):
+    if cfg.cost_noise:
+        cost = cost + cfg.cost_noise * _gauss_noise(cfg.seed, step, tag)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# The step factory
+# ---------------------------------------------------------------------------
+
+
+def _probe_seed(cfg: MGDConfig, probe) -> jnp.ndarray:
+    # distinct, deterministic seed per probe; probe 0 == cfg.seed so
+    # probes=1 is bit-identical to the unprobed path.  uint32 arithmetic —
+    # ``probe`` may be a traced int under lax.map/vmap.
+    return (jnp.uint32(cfg.seed)
+            + jnp.asarray(probe, jnp.uint32) * jnp.uint32(0x9E3779B9))
+
+
+def make_mgd_step(
+    loss_fn: Callable[[Pytree, Any], jnp.ndarray],
+    cfg: MGDConfig,
+    total_params: Optional[int] = None,
+):
+    """Build the jittable MGD iteration.
+
+    ``loss_fn(params, batch) -> scalar cost`` is the ONLY model interface —
+    MGD never sees the network topology (model-free, paper §1).
+
+    Returns ``step_fn(params, state, batch) -> (params, state, metrics)``.
+    The caller controls τ_x by switching ``batch`` every τ_x calls (the data
+    pipeline does this); everything else is internal.
+    """
+
+    def perturbation(params, step, probe=0):
+        return pert.generate(
+            params,
+            ptype=cfg.ptype,
+            step=step,
+            seed=_probe_seed(cfg, probe),
+            dtheta=cfg.dtheta,
+            tau_p=cfg.tau_p,
+            total=total_params,
+        )
+
+    inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
+
+    def probe_once(params, state, batch, probe):
+        """One perturbation probe → (C̃, θ̃, c0, cost_metric)."""
+        n = state.step
+        theta_t = perturbation(params, n, probe)
+        if cfg.mode == "central":
+            c_plus = _noisy(loss_fn(tree_add(params, theta_t), batch),
+                            cfg, n, 2 * probe)
+            c_minus = _noisy(loss_fn(tree_axpy(-1.0, theta_t, params), batch),
+                             cfg, n, 2 * probe + 1)
+            c_tilde = 0.5 * (c_plus - c_minus)
+            return c_tilde, theta_t, state.c0, 0.5 * (c_plus + c_minus)
+        # forward mode (paper Algorithm 1): refresh C₀ when the sample
+        # changed (n % τ_x == 0) or params were updated (n % τ_θ == 0).
+        need_c0 = jnp.logical_or(n % cfg.tau_x == 0, n % cfg.tau_theta == 0)
+        c0 = jax.lax.cond(
+            need_c0,
+            lambda: _noisy(loss_fn(params, batch), cfg, n, 2 * probe).astype(jnp.float32),
+            lambda: state.c0,
+        )
+        c_pert = _noisy(loss_fn(tree_add(params, theta_t), batch),
+                        cfg, n, 2 * probe + 1)
+        return c_pert - c0, theta_t, c0, c0
+
+    def accumulate(params, state, batch):
+        """All probes → averaged error signal contribution + scalars."""
+        if cfg.probes == 1:
+            c_tilde, theta_t, c0, cm = probe_once(params, state, batch, 0)
+            e = tree_scale(theta_t, c_tilde * inv_d2)
+            return e, c_tilde, c0, cm
+
+        def one(probe):
+            c_tilde, theta_t, c0, cm = probe_once(params, state, batch, probe)
+            e = tree_scale(theta_t, c_tilde * inv_d2)
+            return e, c_tilde, c0, cm
+
+        ids = jnp.arange(cfg.probes)
+        if cfg.probe_impl == "vmap":
+            es, cts, c0s, cms = jax.vmap(one)(ids)
+        else:
+            es, cts, c0s, cms = jax.lax.map(one, ids)
+        e = tree_scale(jax.tree_util.tree_map(lambda x: jnp.sum(x, 0), es),
+                       1.0 / cfg.probes)
+        return e, jnp.mean(cts), c0s.reshape(-1)[0], jnp.mean(cms)
+
+    def apply_update(params, state, g_step):
+        """θ ← θ − η·G (Eq. 4), with optional momentum and update noise."""
+        n = state.step
+        m = state.m
+        if cfg.momentum:
+            m = tree_axpy(1.0, g_step, tree_scale(state.m, cfg.momentum))
+            direction = m
+        else:
+            direction = g_step
+        new_params = tree_axpy(-cfg.eta, direction, params)
+        if cfg.update_noise:
+            # σ_θ is expressed in units of Δθ (paper §3.5 / Fig. 9):
+            # θ ← θ − ηG + N(0, σ_θ·Δθ), one gaussian per element from a
+            # counter-based key (restart-reproducible).
+            def leaf_noise(x, i=[0]):
+                i[0] += 1
+                k = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), i[0])
+                k = jax.random.fold_in(k, n)
+                return x + cfg.update_noise * cfg.dtheta * jax.random.normal(
+                    k, x.shape, jnp.float32).astype(x.dtype)
+            new_params = jax.tree_util.tree_map(leaf_noise, new_params)
+        return new_params, m
+
+    # ----- replay-mode update: regenerate θ̃ for the τ_θ window ------------
+    def replay_update(params, state, replay_c):
+        """θ −= η Σ_j C̃_j · θ̃_j / Δθ²  over the last τ_θ steps, with the
+        perturbations regenerated (never stored).  With staleness d>0 the
+        newest d scalars are excluded — they arrive next window."""
+        n = state.step
+
+        window = replay_c.shape[0]
+
+        def body(j, p):
+            # j-th step of the window, oldest first; the buffer slot for
+            # step s is s % window (ring buffer).
+            s = n - (cfg.tau_theta - 1) - cfg.staleness + j
+            theta_j = perturbation(params, s)
+            coef = replay_c[s % window]
+            return tree_axpy(-cfg.eta * inv_d2 * coef, theta_j, p)
+
+        return jax.lax.fori_loop(0, cfg.tau_theta, body, params)
+
+    def step_fn(params, state: MGDState, batch):
+        n = state.step
+        e, c_tilde, c0, cost_metric = accumulate(params, state, batch)
+        do_update = (n + 1) % cfg.tau_theta == 0
+
+        if cfg.replay:
+            window = state.replay_c.shape[0]
+            replay_c = state.replay_c.at[n % window].set(c_tilde)
+            new_params = jax.lax.cond(
+                do_update,
+                lambda: replay_update(params, state, replay_c),
+                lambda: params,
+            )
+            new_state = state._replace(
+                step=n + 1, c0=c0, replay_c=replay_c, metric_cost=cost_metric
+            )
+            metrics = {"cost": cost_metric, "c_tilde": c_tilde,
+                       "updated": do_update.astype(jnp.float32)}
+            return new_params, new_state, metrics
+
+        if cfg.tau_theta == 1:
+            # no accumulator: θ ← θ − η·e directly (update every step);
+            # at deepseek scale an f32 G buffer is 10.5 GiB/device.
+            new_params, new_m = apply_update(params, state, e)
+            new_g = None
+        else:
+            g = tree_add(state.g, e)
+            updated_params, new_m = apply_update(params, state, g)
+            new_params = tree_select(do_update, updated_params, params)
+            new_g = tree_select(do_update, tree_zeros_like(g), g)
+        if cfg.momentum:
+            new_m = tree_select(do_update, new_m, state.m)
+        else:
+            new_m = None
+        new_state = MGDState(
+            step=n + 1, c0=c0, g=new_g, replay_c=None, m=new_m,
+            metric_cost=cost_metric,
+        )
+        metrics = {"cost": cost_metric, "c_tilde": c_tilde,
+                   "updated": do_update.astype(jnp.float32)}
+        return new_params, new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Multi-step driver (τ_x semantics + lax.scan over iterations)
+# ---------------------------------------------------------------------------
+
+
+def make_mgd_epoch(
+    loss_fn, cfg: MGDConfig, steps_per_call: int,
+    sample_fn: Callable[[jnp.ndarray], Any],
+):
+    """Scan ``steps_per_call`` MGD iterations inside one jitted call.
+
+    ``sample_fn(sample_index) -> batch`` implements τ_x: iteration n uses
+    sample index n // τ_x.  Used by the training loop and benchmarks to
+    amortize dispatch overhead (one device program per chunk of steps).
+    """
+    step_fn = make_mgd_step(loss_fn, cfg)
+
+    def body(carry, _):
+        params, state = carry
+        batch = sample_fn(state.step // cfg.tau_x)
+        params, state, metrics = step_fn(params, state, batch)
+        return (params, state), metrics
+
+    @jax.jit
+    def run(params, state):
+        (params, state), metrics = jax.lax.scan(
+            body, (params, state), None, length=steps_per_call
+        )
+        return params, state, metrics
+
+    return run

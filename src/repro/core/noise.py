@@ -1,0 +1,58 @@
+"""Hardware non-ideality models (paper §3.5, Figs 8–10).
+
+Three imperfection families the paper studies:
+
+1. cost noise σ_C       — gaussian noise on every cost read (MGDConfig.cost_noise)
+2. update noise σ_θ     — gaussian noise on every parameter write
+                          (MGDConfig.update_noise)
+3. activation defects σ_a — per-neuron static offsets/scalings of the
+   sigmoid: f_k(a) = α_k·(1 − e^{−β_k(a−a_k)})^{-1} + b_k with
+   α_k, β_k ~ N(1, σ_a) and a_k, b_k ~ N(0, σ_a).  This module provides the
+   defect sampling + defective activation used by the paper-scale models.
+
+All noise is generated from counter-based keys so a checkpoint restart
+replays the identical hardware — the defect pattern is part of the "device",
+not of the training state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ActivationDefects(NamedTuple):
+    """Static per-neuron logistic-function defects (one entry per neuron)."""
+
+    alpha: jnp.ndarray  # output scaling,  N(1, σ_a)
+    beta: jnp.ndarray   # input slope,     N(1, σ_a)
+    a0: jnp.ndarray     # input offset,    N(0, σ_a)
+    b0: jnp.ndarray     # output offset,   N(0, σ_a)
+
+
+def sample_defects(seed: int, n_neurons: int, sigma_a: float) -> ActivationDefects:
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kc, kd = jax.random.split(key, 4)
+    shape = (n_neurons,)
+    return ActivationDefects(
+        alpha=1.0 + sigma_a * jax.random.normal(ka, shape),
+        beta=1.0 + sigma_a * jax.random.normal(kb, shape),
+        a0=sigma_a * jax.random.normal(kc, shape),
+        b0=sigma_a * jax.random.normal(kd, shape),
+    )
+
+
+def ideal_defects(n_neurons: int) -> ActivationDefects:
+    one = jnp.ones((n_neurons,))
+    zero = jnp.zeros((n_neurons,))
+    return ActivationDefects(one, one, zero, zero)
+
+
+def defective_sigmoid(a: jnp.ndarray, d: ActivationDefects) -> jnp.ndarray:
+    """General logistic f_k(a) = α_k·σ(β_k·(a − a_k)) + b_k (paper §3.5).
+
+    ``a`` has neurons on the last axis; defects broadcast over leading axes.
+    σ_a = 0 (ideal_defects) reduces exactly to jax.nn.sigmoid.
+    """
+    return d.alpha * jax.nn.sigmoid(d.beta * (a - d.a0)) + d.b0

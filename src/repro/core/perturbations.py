@@ -1,0 +1,167 @@
+"""Perturbation generators for multiplexed gradient descent (paper §2.1, §3.4).
+
+The paper trains hardware by adding a small, zero-mean perturbation θ̃ᵢ(t) to
+every parameter and homodyne-detecting each parameter's contribution to the
+global cost modulation C̃(t).  Four perturbation families are implemented,
+matching the paper's Fig. 1c / §3.4:
+
+* ``rademacher``  — simultaneous random ±Δθ codes ("statistically orthogonal",
+  the SPSA setting).  This is the at-scale default: each sign is regenerated on
+  demand from a counter-based hash of (step, leaf, intra-leaf index), so the
+  perturbation is never stored — the JAX analogue of the paper's "generated
+  locally and randomly at the parameter" (LFSR-per-synapse) hardware picture.
+* ``walsh``       — deterministic pairwise-orthogonal ±Δθ square waves
+  (code-multiplexing; Walsh functions indexed by parameter).
+* ``sequential``  — one parameter at a time perturbed by +Δθ (finite
+  difference / coordinate descent, depending on τ_θ).
+* ``sinusoidal``  — unique frequency per parameter (frequency multiplexing,
+  the analog Algorithm 2 setting).
+
+All generators are pure functions of (shapes, step, seed) — no state, no HBM
+traffic for the perturbation itself, deterministic across hosts and restarts.
+The Rademacher hash is bit-for-bit reproduced by the Pallas kernels in
+``repro.kernels`` (see ``kernels/ref.py``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .utils import leaf_meta
+
+PERTURBATION_TYPES = ("rademacher", "walsh", "sequential", "sinusoidal")
+
+# ---------------------------------------------------------------------------
+# Counter-based hashing (murmur3 finalizer).  uint32 arithmetic wraps in XLA,
+# which is exactly what we want.  Kept tiny so the same sequence of ops can be
+# emitted inside a Pallas kernel body (see kernels/perturbed_matmul.py).
+# ---------------------------------------------------------------------------
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+
+
+def _fmix32(x):
+    """murmur3 32-bit finalizer — good avalanche, 5 ops, Pallas-friendly."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _M2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def leaf_seed(seed, pert_step, leaf_id):
+    """32-bit per-(step, leaf) seed.  Scalars; works on host ints or tracers."""
+    s = jnp.uint32(seed) * _GOLDEN + jnp.uint32(leaf_id)
+    s = _fmix32(s)
+    s = s + jnp.asarray(pert_step, jnp.uint32) * _M1
+    return _fmix32(s)
+
+
+def rademacher_signs(lseed, idx):
+    """±1 (float32) signs from a leaf seed and intra-leaf indices (uint32)."""
+    h = _fmix32(idx.astype(jnp.uint32) * _GOLDEN + lseed)
+    # top bit → sign
+    return 1.0 - 2.0 * (h >> np.uint32(31)).astype(jnp.float32)
+
+
+def _walsh_signs(pert_step, idx):
+    """Walsh function W_{i+1}(t): (-1)^popcount((i+1) & t).
+
+    Deterministically pairwise-orthogonal over any 2^k period covering the
+    parameter count.  Index 0 (the all-ones, non-zero-mean code) is skipped.
+    """
+    v = (idx.astype(jnp.uint32) + np.uint32(1)) & jnp.asarray(pert_step, jnp.uint32)
+    v = v ^ (v >> np.uint32(16))
+    v = v ^ (v >> np.uint32(8))
+    v = v ^ (v >> np.uint32(4))
+    v = v ^ (v >> np.uint32(2))
+    v = v ^ (v >> np.uint32(1))
+    parity = (v & np.uint32(1)).astype(jnp.float32)
+    return 1.0 - 2.0 * parity
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def generate(params_like, *, ptype, step, seed, dtheta, tau_p=1, total=None):
+    """Generate the perturbation pytree θ̃ for global timestep ``step``.
+
+    params_like may hold concrete arrays or ShapeDtypeStructs — only shapes and
+    dtypes are consulted.  Returns a pytree of the same structure/dtype whose
+    leaves are the perturbations (amplitude Δθ folded in).
+
+    ``tau_p`` is the perturbation time constant: the perturbation pattern only
+    advances every tau_p steps (paper Table 1).
+    """
+    if ptype not in PERTURBATION_TYPES:
+        raise ValueError(f"unknown perturbation type {ptype!r}")
+    metas = leaf_meta(params_like)
+    total = total or sum(m[2] for m in metas)
+    pert_step = jnp.asarray(step, jnp.int32) // jnp.int32(tau_p)
+    leaves = jax.tree_util.tree_leaves(params_like)
+    out = []
+    for (lid, offset, n), leaf in zip(metas, leaves):
+        shape = leaf.shape
+        if ptype == "rademacher":
+            idx = jax.lax.iota(jnp.uint32, n)
+            sgn = rademacher_signs(leaf_seed(seed, pert_step, lid), idx)
+            pert = sgn * dtheta
+        elif ptype == "walsh":
+            idx = jax.lax.iota(jnp.uint32, n) + np.uint32(offset)
+            pert = _walsh_signs(pert_step, idx) * dtheta
+        elif ptype == "sequential":
+            idx = jax.lax.iota(jnp.int32, n) + jnp.int32(offset)
+            active = (pert_step % jnp.int32(total)).astype(jnp.int32)
+            pert = jnp.where(idx == active, dtheta, 0.0).astype(jnp.float32)
+        elif ptype == "sinusoidal":
+            idx = jax.lax.iota(jnp.float32, n) + float(offset)
+            # unique frequency per parameter within (0, f_max], f_max = 1/(2 tau_p)
+            f = (idx + 1.0) / float(total + 1) * (0.5 / float(tau_p))
+            t = jnp.asarray(step, jnp.float32)
+            pert = dtheta * jnp.sin(2.0 * np.pi * f * t)
+        out.append(pert.reshape(shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_like), out
+    )
+
+
+def generate_signs_only(params_like, *, step, seed, tau_p=1):
+    """Rademacher ±1 signs (no Δθ), f32 — used by the homodyne accumulation
+    and the scalar-replay update so the Δθ² normalization cancels exactly."""
+    metas = leaf_meta(params_like)
+    pert_step = jnp.asarray(step, jnp.int32) // jnp.int32(tau_p)
+    leaves = jax.tree_util.tree_leaves(params_like)
+    out = []
+    for (lid, _, n), leaf in zip(metas, leaves):
+        idx = jax.lax.iota(jnp.uint32, n)
+        sgn = rademacher_signs(leaf_seed(seed, pert_step, lid), idx)
+        out.append(sgn.reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_like), out
+    )
+
+
+def orthogonality_check(ptype, n_params, n_steps, *, seed=0, dtheta=1.0, tau_p=1):
+    """Empirical Gram matrix of the perturbation sequences (test helper).
+
+    Returns the (n_params, n_params) normalized time-average of θ̃ᵢθ̃ⱼ — the
+    paper's pairwise-orthogonality condition is Gram ≈ Δθ²·I (sinusoids: Δθ²/2·I).
+    """
+    dummy = {"w": jax.ShapeDtypeStruct((n_params,), jnp.float32)}
+
+    def one(t):
+        return generate(
+            dummy, ptype=ptype, step=t, seed=seed, dtheta=dtheta, tau_p=tau_p
+        )["w"]
+
+    seq = jax.vmap(one)(jnp.arange(n_steps))  # [T, P]
+    return (seq.T @ seq) / n_steps

@@ -1,0 +1,94 @@
+"""Pod-local probe parallelism — MGD's native way to use a multi-pod fleet.
+
+Plain data parallelism under MGD would psum the per-pod costs into one
+global C̃ and pair it with one global perturbation.  Instead, each pod k
+draws its OWN perturbation θ̃_k and evaluates its OWN data shard, giving k
+independent (C̃_k, θ̃_k) probe pairs per step:
+
+    update = −η · (1/k) Σ_k C̃_k · θ̃_k / Δθ²
+
+* Unbiased: E[C̃_k·θ̃_k/Δθ²] = ∇L_k, so the average estimates ∇(mean_k L_k)
+  — the same target as synchronous DP.
+* k× probe-variance reduction at ZERO extra forward FLOPs versus DP (each
+  pod was computing its shard anyway).  This axis exists only because MGD
+  is forward-only; backprop has no analogue.
+* Cross-pod traffic: ONE all-gather of k f32 scalars per step.  Every pod
+  then regenerates all k sign-trees locally (counter hash, elementwise,
+  ≪ matmul FLOPs) and applies the identical update, keeping parameters
+  bit-replicated across pods with no parameter collective at all.
+
+Implemented as shard_map manual over the "pod" axis only; "data"/"model"
+stay automatic, so the inner forward keeps its pjit sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import perturbations as pert
+from .mgd import MGDConfig
+from .utils import tree_add, tree_axpy, tree_scale
+
+
+def make_probe_parallel_step(
+    loss_fn: Callable,
+    cfg: MGDConfig,
+    mesh,
+    *,
+    probe_axis: str = "pod",
+    param_specs=None,
+    batch_specs=None,
+):
+    """Build step_fn(params, step, batch) → (params, metrics).
+
+    central-difference, τ_θ = 1 (immediate update) — the at-scale serving
+    configuration.  params stay replicated over ``probe_axis`` and keep
+    their own (model/fsdp) sharding on the automatic axes.
+    """
+    assert cfg.mode == "central", "probe-parallel uses central differences"
+    n_pods = mesh.shape[probe_axis]
+    inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
+
+    def pod_seed(pod_idx):
+        return (jnp.uint32(cfg.seed)
+                + jnp.asarray(pod_idx, jnp.uint32) * jnp.uint32(0x9E3779B9))
+
+    def run(params, step, batch):
+        pod = jax.lax.axis_index(probe_axis)
+        theta = pert.generate(
+            params, ptype=cfg.ptype, step=step, seed=pod_seed(pod),
+            dtheta=cfg.dtheta, tau_p=cfg.tau_p)
+        c_plus = loss_fn(tree_add(params, theta), batch)
+        c_minus = loss_fn(tree_axpy(-1.0, theta, params), batch)
+        c_local = (0.5 * (c_plus - c_minus)).astype(jnp.float32)
+        all_c = jax.lax.all_gather(c_local, probe_axis)        # [k] scalars
+
+        def body(k, p):
+            signs = pert.generate(
+                p, ptype=cfg.ptype, step=step, seed=pod_seed(k),
+                dtheta=cfg.dtheta, tau_p=cfg.tau_p)
+            coef = -cfg.eta * inv_d2 * all_c[k] / n_pods
+            return tree_axpy(coef, signs, p)
+
+        new_params = jax.lax.fori_loop(0, n_pods, body, params)
+        cost = 0.5 * (c_plus + c_minus)
+        return new_params, {"cost": cost.astype(jnp.float32),
+                            "c_tilde_mean": jnp.mean(jnp.abs(all_c))}
+
+    shard = jax.shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(), P(probe_axis)),
+        out_specs=(P(), P()),
+        axis_names=frozenset({probe_axis}),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def step_fn(params, step, batch):
+        return shard(params, jnp.asarray(step, jnp.int32), batch)
+
+    return step_fn

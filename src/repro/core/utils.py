@@ -1,0 +1,82 @@
+"""Small pytree utilities shared across the MGD core.
+
+All helpers are shape-only or elementwise so they trace cleanly under jit with
+``ShapeDtypeStruct`` leaves (required by the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree (python int, static)."""
+    return sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(tree))
+
+
+def leaf_meta(tree):
+    """Per-leaf (leaf_id, global_offset, size) in flattened order.
+
+    The ordering is the canonical ``tree_flatten`` order, which is stable for a
+    fixed pytree structure — this is what makes perturbations reproducible
+    across restarts and across hosts (every host sees the same structure).
+    Returns a list aligned with ``tree_leaves(tree)``.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    metas = []
+    offset = 0
+    for i, leaf in enumerate(leaves):
+        n = math.prod(leaf.shape)
+        metas.append((i, offset, n))
+        offset += n
+    return metas
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), tree)
+
+
+def tree_axpy(a, x, y):
+    """y + a * x, computed in f32 then cast back to y.dtype (bf16-safe)."""
+    return jax.tree_util.tree_map(
+        lambda xi, yi: (yi.astype(jnp.float32) + a * xi.astype(jnp.float32)).astype(yi.dtype),
+        x,
+        y,
+    )
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_select(pred, a, b):
+    """Elementwise ``where(pred, a, b)`` over two pytrees (pred is scalar bool)."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across the whole pytree, in f32."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)

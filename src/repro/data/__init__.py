@@ -1,0 +1,2 @@
+"""Synthetic data substrate (offline container → procedural datasets)."""
+from . import tasks, pipeline

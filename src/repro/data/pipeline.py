@@ -1,0 +1,73 @@
+"""Host data pipeline: τ_x-aware sample feeds + device placement.
+
+MGD's τ_x (input-sample change time) is a *data-pipeline* responsibility:
+the same batch must be presented for τ_x consecutive MGD iterations.  The
+builders here return ``sample_fn(sample_index) -> batch`` callables that
+``make_mgd_epoch`` drives with index = step // τ_x — pure functions of the
+index, so training is deterministic across restarts and hosts.
+
+``shard_batch`` places a global batch onto a mesh with the "batch" logical
+axes (used by the launch drivers).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import NamedSharding
+from repro.distributed.sharding import logical_spec
+
+from . import tasks
+
+
+def dataset_sampler(x, y, batch_size: int, *, wrap=True):
+    """Cycle deterministically through a fixed dataset (XOR/parity-style).
+
+    sample_fn(i) yields the i-th batch (wrapping); batch_size = len(x)
+    reproduces the paper's 'all four samples each τ_x' setting.
+    """
+    n = x.shape[0]
+
+    def sample_fn(i):
+        if batch_size >= n:
+            return {"x": x, "y": y}
+        start = (i * batch_size) % n if wrap else i * batch_size
+        idx = (start + jnp.arange(batch_size)) % n
+        return {"x": jnp.take(x, idx, axis=0), "y": jnp.take(y, idx, axis=0)}
+
+    return sample_fn
+
+
+def generator_sampler(batch_fn: Callable, batch_size: int, *, seed=0,
+                      as_dict_keys=("x", "y")):
+    """Index-seeded procedural sampler: sample_fn(i) = batch_fn(key_i, B).
+
+    Works under jit/scan — the key is derived from the traced index.
+    """
+
+    def sample_fn(i):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        out = batch_fn(key, batch_size)
+        if isinstance(out, dict):
+            return out
+        return dict(zip(as_dict_keys, out))
+
+    return sample_fn
+
+
+def lm_sampler(batch_size: int, seq_len: int, vocab: int, *, seed=0):
+    return generator_sampler(
+        lambda k, b: tasks.lm_batch(k, b, seq_len, vocab), batch_size,
+        seed=seed)
+
+
+def shard_batch(batch, mesh):
+    """Place a host batch onto the mesh, batch dim → ("pod","data")."""
+
+    def put(x):
+        spec = logical_spec(x.shape, ["batch"], mesh)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, batch)

@@ -1,0 +1,138 @@
+"""Procedural datasets for every paper experiment (offline container).
+
+* XOR / n-bit parity — exact (the paper's Figs 4–7, 9).
+* NIST7x7 — procedural reproduction of the paper's 7×7 N/I/S/T letter task
+  (base glyphs + pixel noise + shift augmentations; 49-4-4 net target).
+* Fashion-MNIST / CIFAR-10 stand-ins — procedural class-template images of
+  identical shape/cardinality (28×28×1 and 32×32×3, 10 classes).  The repo
+  validates MGD-vs-backprop parity ON THE SAME DATA, not absolute paper
+  accuracies (recorded in DESIGN.md §Honest limitations).
+* Synthetic LM streams — Zipf-Markov token sequences for the LM-scale archs.
+
+Every sampler is a pure function of (key/index) — restartable, shardable,
+and identical across hosts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- parity -----------------------------------------------------------------
+
+
+def parity_dataset(n_bits: int):
+    """All 2^n (x, y) pairs; y = XOR of bits.  Returns (x [N,n], y [N,1])."""
+    n = 2 ** n_bits
+    x = ((np.arange(n)[:, None] >> np.arange(n_bits)[None, :]) & 1
+         ).astype(np.float32)
+    y = (x.sum(axis=1) % 2).astype(np.float32)[:, None]
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def xor_dataset():
+    return parity_dataset(2)
+
+
+# --- NIST7x7 ----------------------------------------------------------------
+
+_GLYPHS = {
+    "N": ["X.....X", "XX....X", "X.X...X", "X..X..X", "X...X.X", "X....XX",
+          "X.....X"],
+    "I": ["..XXX..", "...X...", "...X...", "...X...", "...X...", "...X...",
+          "..XXX.."],
+    "S": [".XXXXX.", "X......", "X......", ".XXXX..", "......X", "......X",
+          "XXXXXX."],
+    "T": ["XXXXXXX", "...X...", "...X...", "...X...", "...X...", "...X...",
+          "...X..."],
+}
+
+
+def _glyph_array(name):
+    return np.array([[1.0 if c == "X" else 0.0 for c in row]
+                     for row in _GLYPHS[name]], np.float32)
+
+
+_BASE = np.stack([_glyph_array(c) for c in "NIST"])  # [4,7,7]
+
+
+def nist7x7_batch(key, batch_size: int, *, noise=0.25, shift=True):
+    """Random (x [B,49], y one-hot [B,4]) N/I/S/T samples with pixel noise
+    and ±1 px shifts — the paper's small image task, generated on the fly."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (batch_size,), 0, 4)
+    imgs = jnp.asarray(_BASE)[labels]                      # [B,7,7]
+    if shift:
+        sh = jax.random.randint(k2, (batch_size, 2), -1, 2)
+        imgs = jax.vmap(lambda im, s: jnp.roll(im, s, axis=(0, 1)))(imgs, sh)
+    imgs = imgs + noise * jax.random.normal(k3, imgs.shape)
+    x = imgs.reshape(batch_size, 49)
+    y = jax.nn.one_hot(labels, 4)
+    return x, y
+
+
+# --- procedural image classes (F-MNIST / CIFAR stand-ins) -------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _templates(hw: int, ch: int, n_classes: int, seed: int):
+    # numpy-eager (never traced): lru_cache inside a jit would otherwise
+    # cache a tracer.  Smooth class templates = low-frequency random fields.
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((n_classes, hw // 4, hw // 4, ch))
+    t = np.repeat(np.repeat(base, 4, axis=1), 4, axis=2)
+    # light smoothing to remove the blockiness
+    t = (t + np.roll(t, 1, axis=1) + np.roll(t, 1, axis=2)
+         + np.roll(t, -1, axis=1) + np.roll(t, -1, axis=2)) / 5.0
+    # cache a PURE numpy array: caching a jax constant created inside a
+    # trace leaks the tracer into later traces (lru_cache + jit hazard)
+    return t.astype(np.float32)
+
+
+def procedural_image_batch(key, batch_size: int, *, hw, ch, n_classes=10,
+                           noise=0.6, seed=17):
+    """x [B,hw,hw,ch] f32, y one-hot [B,n_classes]."""
+    t = jnp.asarray(_templates(hw, ch, n_classes, seed))
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (batch_size,), 0, n_classes)
+    imgs = t[labels]
+    sh = jax.random.randint(k2, (batch_size, 2), -2, 3)
+    imgs = jax.vmap(lambda im, s: jnp.roll(im, s, axis=(0, 1)))(imgs, sh)
+    imgs = imgs + noise * jax.random.normal(k3, imgs.shape)
+    return imgs, jax.nn.one_hot(labels, n_classes)
+
+
+def fashion_batch(key, batch_size: int):
+    return procedural_image_batch(key, batch_size, hw=28, ch=1, seed=23)
+
+
+def cifar_batch(key, batch_size: int):
+    return procedural_image_batch(key, batch_size, hw=32, ch=3, seed=29)
+
+
+# --- synthetic LM token streams ---------------------------------------------
+
+
+def lm_batch(key, batch_size: int, seq_len: int, vocab: int):
+    """Zipf-Markov synthetic text: token t+1 = hash-mix of token t with
+    Zipfian resets.  Returns dict(tokens, labels) with next-token labels."""
+    k1, k2 = jax.random.split(key)
+    # Zipfian marginal via inverse-CDF on uniform
+    u = jax.random.uniform(k1, (batch_size, seq_len + 1), minval=1e-6)
+    z = jnp.exp(u * np.log(vocab)).astype(jnp.int32) - 1   # ~1/rank
+    z = jnp.clip(z, 0, vocab - 1)
+    # local structure: 75% of positions continue a deterministic chain
+    cont = jax.random.bernoulli(k2, 0.75, (batch_size, seq_len + 1))
+
+    def chain(prev, inputs):
+        zt, ct = inputs
+        nxt = jnp.where(ct, (prev * 31 + 7) % vocab, zt)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(chain, z[:, 0],
+                           (z.T[1:], cont.T[1:]))
+    toks = jnp.concatenate([z[:, :1], toks.T], axis=1)     # [B, S+1]
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

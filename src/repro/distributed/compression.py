@@ -1,0 +1,51 @@
+"""Gradient compression for the backprop baseline's all-reduce.
+
+int8 stochastic quantization with error feedback (residual carried between
+steps) — the standard distributed-optimization trick for shrinking the
+O(P) gradient all-reduce that backprop needs at pod scale.
+
+MGD needs none of this: its entire feedback channel is ONE scalar per step
+(the cost psum), which is the quantitative point the benchmark harness
+makes when it compares collective bytes (EXPERIMENTS.md §Roofline).  This
+module exists so the baseline is a fair, production-grade strawman.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_init(params):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def quantize_int8(g, residual, key):
+    """g + residual → (int8 codes, scale, new residual).  Stochastic
+    rounding keeps the quantizer unbiased."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scaled = gf / scale
+    noise = jax.random.uniform(key, gf.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    new_residual = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_gradients(grads, residuals, seed_step):
+    """Tree-wise int8+EF round trip (the all-reduce would move the int8
+    payload; XLA inserts it when this feeds a psum under pjit)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = jax.tree_util.tree_leaves(residuals)
+    out_g, out_r = [], []
+    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+        key = jax.random.fold_in(jax.random.PRNGKey(17 + i), seed_step)
+        q, scale, nr = quantize_int8(g, r, key)
+        out_g.append(dequantize_int8(q, scale).astype(g.dtype))
+        out_r.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_r))

@@ -1,0 +1,211 @@
+"""Logical-axis sharding: one vocabulary, any mesh.
+
+Models annotate activations with *logical* axis names ("batch", "seq",
+"model", "expert", "fsdp"); this module translates them to whatever mesh is
+active — (16,16) ("data","model") single-pod, (2,16,16) ("pod","data",
+"model") multi-pod, or no mesh at all (CPU tests → no-op).  Translation
+drops axes the mesh doesn't have and axes that don't divide the dimension,
+so the same model code lowers everywhere.
+
+Logical vocabulary:
+    batch  → ("pod", "data")   data parallelism (outer "pod" included)
+    seq    → ("data",)         sequence parallelism (long-context KV/state)
+    model  → ("model",)        tensor parallelism
+    expert → ("model",)        expert parallelism (MoE banks)
+    fsdp   → ("data",)         parameter sharding on the DP axis (ZeRO-3
+                               style; MGD has no optimizer state to shard —
+                               this shards the weights themselves)
+    pod    → ("pod",)          explicit pod axis (probe parallelism)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "fsdp": ("data",),
+    "pod": ("pod",),
+    # sequence parallelism: residual-stream seq dim sharded over the TP
+    # axis between blocks (Megatron-SP) — GSPMD turns the per-layer
+    # all-reduces into reduce-scatter + all-gather (½ the wire bytes) and
+    # norms/elementwise run on 1/TP of the tokens.
+    "sp": ("model",),
+    # decode KV/latent caches: sequence dim sharded over every axis the
+    # batch dim didn't consume (the spec builder dedups used axes) — B=128
+    # decode gets seq→model, B=1 long-context gets seq→data×model.
+    "kvseq": ("data", "model"),
+}
+
+# pure data parallelism: for models too small to feed a 16-wide TP axis,
+# spend the "model" axis on batch too.  MGD makes this unusually cheap:
+# no gradient all-reduce, no optimizer state — the only sync is the
+# scalar cost psum.
+PURE_DP_RULES = {
+    **LOGICAL_RULES,
+    "batch": ("pod", "data", "model"),
+    "model": (),
+    "expert": (),
+    "fsdp": (),
+    "sp": (),
+}
+
+# FSDP-only: every device computes the full model on its batch shard;
+# weights are sharded across ALL axes and all-gathered per layer.
+# Forward-only MGD never reduce-scatters gradients, so the per-layer wire
+# cost is ONE weight all-gather — cheaper than Megatron-TP's two
+# activation all-reduces whenever tokens/device·d > params/layer.
+DP_FSDP_RULES = {
+    **LOGICAL_RULES,
+    "batch": ("pod", "data", "model"),
+    "model": (),
+    "expert": (),
+    "sp": (),
+    "fsdp": ("pod", "data", "model"),
+}
+
+# MoE-EP: experts keep expert parallelism over "model"; the dense parts
+# (MLA projections, router, embeddings) drop tensor parallelism and run
+# FSDP-style over "data" instead — their per-layer weight all-gather is
+# far cheaper than the activation all-reduces TP needs at d_model 7168.
+MOE_EP_RULES = {
+    **LOGICAL_RULES,
+    "model": (),
+    "sp": (),
+    "expert": ("model",),
+    "fsdp": ("data", "model"),
+}
+
+RULE_SETS = {"default": LOGICAL_RULES, "pure_dp": PURE_DP_RULES,
+             "dp_fsdp": DP_FSDP_RULES, "moe_ep": MOE_EP_RULES}
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_ACTIVE_RULES: dict = LOGICAL_RULES
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh (+ optional logical-rule table) during tracing."""
+    global _ACTIVE_MESH, _ACTIVE_RULES
+    prev, prev_rules = _ACTIVE_MESH, _ACTIVE_RULES
+    _ACTIVE_MESH = mesh
+    _ACTIVE_RULES = rules or LOGICAL_RULES
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+        _ACTIVE_RULES = prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def _translate(name, dim_size, mesh, rules=None) -> Optional[tuple]:
+    """Logical name → tuple of mesh axes (or None = replicated)."""
+    if name is None:
+        return None
+    rules = rules or _ACTIVE_RULES
+    axes = tuple(a for a in rules.get(name, ())
+                 if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if dim_size is not None and dim_size % total != 0:
+        # try dropping trailing axes until it divides (e.g. kv-heads smaller
+        # than the model axis → replicate)
+        while axes:
+            axes = axes[:-1]
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if axes and dim_size % total == 0:
+                return axes
+        return None
+    return axes
+
+
+def logical_spec(shape, names, mesh=None, *, align="left") -> P:
+    """Build a PartitionSpec for ``shape`` from logical ``names``.
+
+    ``align="right"`` pads names on the left (stacked-layer leading dims).
+    A mesh axis is used at most once per spec — later dims that would reuse
+    an axis are replicated (e.g. a [B, S, ...] cache asking for "batch" and
+    "seq" on a mesh where both map to "data" shards only the batch dim).
+    """
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return P()
+    names = list(names)
+    if len(names) < len(shape):
+        pad = [None] * (len(shape) - len(names))
+        names = (pad + names) if align == "right" else (names + pad)
+    entries = []
+    used = set()
+    for dim, name in zip(shape, names):
+        axes = _translate(name, dim, mesh)
+        if axes is not None:
+            axes = tuple(a for a in axes if a not in used)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if not axes or dim % total != 0:
+                axes = None
+        if axes is None:
+            entries.append(None)
+        elif len(axes) == 1:
+            used.add(axes[0])
+            entries.append(axes[0])
+        else:
+            used.update(axes)
+            entries.append(axes)
+    return P(*entries)
+
+
+def shard(x, *names):
+    """Activation sharding constraint in logical names; no-op without mesh."""
+    if _ACTIVE_MESH is None:
+        return x
+    spec = logical_spec(x.shape, names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings from path-pattern rules
+# ---------------------------------------------------------------------------
+
+
+def param_specs(params_shape, rules, mesh=None):
+    """Map a params shape-pytree to a PartitionSpec pytree.
+
+    ``rules`` is an ordered list of (regex, logical-names) — first match on
+    the '/'-joined tree path wins; unmatched leaves are replicated.  Names
+    are RIGHT-aligned to the leaf shape, so one rule covers both a stacked
+    [L, d, f] bank and an unstacked [d, f] matrix.
+    """
+    mesh = mesh or _ACTIVE_MESH
+
+    def one(path, leaf):
+        pstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        for pat, names in rules:
+            if re.search(pat, pstr):
+                return logical_spec(leaf.shape, names, mesh, align="right")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def named_shardings(params_shape, rules, mesh):
+    specs = param_specs(params_shape, rules, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)

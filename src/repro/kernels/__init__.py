@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for MGD compute hot-spots.
+
+* ``perturbed_matmul`` — x @ (W + Δθ·θ̃) with the Rademacher signs generated
+  in VMEM during the MXU matmul (θ̃ never exists in HBM).
+* ``mgd_update``       — fused scalar-replay window update
+  W −= (η/Δθ)·Σ_j C̃_j·θ̃_j, HBM traffic = one read + one write of W.
+
+``ops`` holds the jit'd dispatch wrappers (pallas / interpret / ref);
+``ref`` holds the pure-jnp oracles that share the exact counter hash.
+"""
+from . import ops, ref
+from .ops import perturbed_matmul, mgd_update
+
+__all__ = ["ops", "ref", "perturbed_matmul", "mgd_update"]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused scalar-replay MGD parameter update.
+
+Applies the τ_θ-window update of the scalar-replay mode in one pass over W:
+
+    W ← W − (η/Δθ) · Σ_j  c̃_j · sign(h(idx, lseed_j))
+
+The per-window-step leaf seeds (lseed_j) and cost scalars (c̃_j) live in SMEM
+(scalar-prefetch); the J sign regenerations happen in VMEM against the
+already-resident W tile.  HBM traffic is therefore read-W + write-W — the
+same bytes as a plain SGD update, independent of the window length J — which
+is the memory-roofline form of the paper's "no per-parameter gradient memory"
+claim for τ_θ > τ_p hardware.
+
+Grid: (K/bk, N/bn); the J-loop is an in-register fori_loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .perturbed_matmul import _fmix32, _GOLDEN
+
+
+def _kernel(lseeds_ref, coefs_ref, w_ref, o_ref, *,
+            scale, bk, bn, n_cols, window):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # i/j are traced program ids — convert via astype, not np.uint32
+    rows = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
+            + (i * bk).astype(jnp.uint32))
+    cols = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+            + (j * bn).astype(jnp.uint32))
+    idx_g = rows * np.uint32(n_cols) + cols
+
+    def body(t, acc):
+        h = _fmix32(idx_g * _GOLDEN + lseeds_ref[t])
+        sgn = 1.0 - 2.0 * (h >> np.uint32(31)).astype(jnp.float32)
+        return acc + coefs_ref[t] * sgn
+
+    acc = jax.lax.fori_loop(
+        0, window, body, jnp.zeros((bk, bn), jnp.float32)
+    )
+    o_ref[...] = (w_ref[...].astype(jnp.float32) - scale * acc).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eta", "dtheta", "bk", "bn", "interpret")
+)
+def mgd_update(
+    w: jnp.ndarray,        # [K, N] parameter matrix
+    lseeds: jnp.ndarray,   # [J] uint32 — leaf_seed per window step
+    coefs: jnp.ndarray,    # [J] f32   — C̃ scalar per window step
+    *,
+    eta: float,
+    dtheta: float,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """W − (η/Δθ)·Σ_j coefs[j]·signs_j, fused; returns the updated W."""
+    kdim, n = w.shape
+    bk, bn = min(bk, kdim), min(bn, n)
+    assert kdim % bk == 0 and n % bn == 0, (w.shape, bk, bn)
+    window = lseeds.shape[0]
+    assert coefs.shape == (window,)
+
+    kernel = functools.partial(
+        _kernel, scale=float(eta) / float(dtheta),
+        bk=bk, bn=bn, n_cols=n, window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(kdim // bk, n // bn),
+            in_specs=[pl.BlockSpec((bk, bn), lambda i, j, *_: (i, j))],
+            out_specs=pl.BlockSpec((bk, bn), lambda i, j, *_: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((kdim, n), w.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lseeds, jnp.uint32), jnp.asarray(coefs, jnp.float32), w)

@@ -1,0 +1,92 @@
+"""jit'd dispatch wrappers for the MGD Pallas kernels.
+
+``impl`` selection:
+* "pallas"    — compiled Pallas (TPU target)
+* "interpret" — Pallas interpret mode (CPU-correctness path; default when no
+  TPU backend is present)
+* "ref"       — pure-jnp oracle (always available, materializes θ̃)
+
+The wrappers pad non-tile-aligned shapes, so any (M, K, N) works.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .mgd_update import mgd_update as _mgd_update_pallas
+from .perturbed_matmul import perturbed_matmul as _perturbed_matmul_pallas
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def perturbed_matmul(x, w, lseed, *, dtheta, sign=1.0, impl=None,
+                     bm=128, bn=128, bk=128, out_dtype=None):
+    """y = x @ (W + sign·Δθ·rademacher(lseed)); θ̃ fused in-kernel.
+
+    Leading batch dims of ``x`` are flattened into M.  Arbitrary shapes are
+    zero-padded to tile multiples (padding K would corrupt the sign indexing
+    of W, so K/N padding pads W *columns/rows are index-significant* — we
+    instead require the caller's W shape and pad only M).
+    """
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.perturbed_matmul_ref(
+            x, w, lseed, dtheta=dtheta, sign=sign, out_dtype=out_dtype)
+
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, x.shape[-1])
+    kdim, n = w.shape
+    # M padding is sign-safe (signs depend only on W's indices)
+    bm_eff = min(bm, max(8, m))
+    x2p = _pad_to(x2, bm_eff, 0)
+    # K and N must tile exactly — pick divisors instead of padding
+    bk_eff = _largest_tile(kdim, bk)
+    bn_eff = _largest_tile(n, bn)
+    y = _perturbed_matmul_pallas(
+        x2p, w, lseed, dtheta=dtheta, sign=sign,
+        bm=min(bm_eff, x2p.shape[0]), bn=bn_eff, bk=bk_eff,
+        out_dtype=out_dtype or x.dtype,
+        interpret=(impl == "interpret"),
+    )
+    return y[:m].reshape(*lead, n)
+
+
+def mgd_update(w, lseeds, coefs, *, eta, dtheta, impl=None, bk=256, bn=256):
+    """Fused scalar-replay window update for one weight matrix."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.mgd_update_ref(w, lseeds, coefs, eta=eta, dtheta=dtheta)
+    kdim, n = w.shape
+    return _mgd_update_pallas(
+        w, lseeds, coefs, eta=eta, dtheta=dtheta,
+        bk=_largest_tile(kdim, bk), bn=_largest_tile(n, bn),
+        interpret=(impl == "interpret"),
+    )
+
+
+def _largest_tile(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ cap (prefers MXU-aligned)."""
+    if dim <= cap:
+        return dim
+    for t in range(cap, 0, -1):
+        if dim % t == 0:
+            return t
+    return dim

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Bit-exactness contract: these use the *same* murmur3 counter hash via
+``repro.core.perturbations``, with the same row-major linear indexing, so
+the Pallas kernels (interpret or TPU) must match them exactly on the sign
+pattern and to float tolerance on the accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perturbations import rademacher_signs
+
+
+def leaf_signs(lseed, shape):
+    """±1 f32 signs for a whole leaf of ``shape`` (row-major indexing)."""
+    n = 1
+    for s in shape:
+        n *= s
+    idx = jax.lax.iota(jnp.uint32, n)
+    return rademacher_signs(lseed, idx).reshape(shape)
+
+
+def perturbed_matmul_ref(x, w, lseed, *, dtheta, sign=1.0, out_dtype=None):
+    """y = x @ (W + sign·Δθ·signs) — materializes θ̃ (the thing the Pallas
+    kernel avoids); used as the correctness oracle."""
+    signs = leaf_signs(jnp.asarray(lseed, jnp.uint32), w.shape)
+    wp = w.astype(jnp.float32) + (sign * dtheta) * signs
+    y = x.astype(jnp.float32) @ wp
+    return y.astype(out_dtype or x.dtype)
+
+
+def mgd_update_ref(w, lseeds, coefs, *, eta, dtheta):
+    """W − (η/Δθ)·Σ_j coefs[j]·signs_j — materializes every window sign."""
+    acc = jnp.zeros(w.shape, jnp.float32)
+    for j in range(lseeds.shape[0]):
+        acc = acc + coefs[j] * leaf_signs(lseeds[j], w.shape)
+    return (w.astype(jnp.float32) - (eta / dtheta) * acc).astype(w.dtype)

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run overrides the host platform device count before first jax use.
+
+Topology (TPU v5e-class pods):
+    single-pod:  (16, 16)      axes ("data", "model")        — 256 chips
+    multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+The "pod" axis is outer data parallelism by default; MGD re-purposes it as
+the probe axis (core/probe_parallel.py) or a pipeline axis
+(distributed/pipeline.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D "data" mesh (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

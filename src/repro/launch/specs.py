@@ -1,0 +1,152 @@
+"""Sharding rules + abstract input specs for every (arch × shape) cell.
+
+``PARAM_RULES`` is the single ordered rule table translating parameter-tree
+paths to logical axis names (right-aligned; see distributed/sharding).
+``input_specs`` builds ShapeDtypeStruct stand-ins for the dry-run — weak-
+type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import ArchConfig, init_cache, model_init
+
+
+# Ordered: first match wins.  "fsdp" resolves to nothing unless cfg.fsdp.
+def param_rules(cfg: ArchConfig):
+    fsdp = "fsdp" if cfg.fsdp else None
+    rules = [
+        # embeddings / head
+        (r"embed/tok/table$", ("model", None)),          # vocab-sharded
+        (r"embed/head/w$", (fsdp, "model")),
+        # MoE
+        (r"moe/router/w$", (None, "expert")),
+        (r"moe/shared/(gate|up)/w$", (fsdp, "model")),
+        (r"moe/shared/down/w$", ("model", fsdp)),
+        (r"moe/(gate|up)$", ("expert", fsdp, None)),     # [E, d, f] banks
+        (r"moe/down$", ("expert", None, fsdp)),          # [E, f, d]
+        # dense MLP
+        (r"mlp/(gate|up)/w$", (fsdp, "model")),
+        (r"mlp/down/w$", ("model", fsdp)),
+        # rwkv6 channel-mix (before the generic wk/wv rules)
+        (r"ffn/wk/w$", (fsdp, "model")),
+        (r"ffn/wv/w$", ("model", fsdp)),
+        (r"ffn/wr/w$", (fsdp, "model")),
+        # attention / rwkv time-mix / MLA projections
+        (r"(wq|wk|wv|wg|wr|wq_b|wkv_b)/w$", (fsdp, "model")),
+        (r"(wq_a|wkv_a|in_proj)/w$", (fsdp, "model")),
+        (r"(wo|out_proj)/w$", ("model", fsdp)),
+        (r"(wq|wk|wv|in_proj)/b$", ("model",)),
+        # rwkv decay LoRA / bonus
+        (r"w_lora_a$", (fsdp, None)),
+        (r"w_lora_b$", (None, "model")),
+        (r"att/u$", ("model", None)),
+        (r"att/w0$", ("model",)),
+        # mamba2 scalars / conv
+        (r"(a_log|d_skip|dt_bias)$", ("model",)),
+        (r"conv_w$", (None, "model")),
+        (r"conv_b$", ("model",)),
+        (r"norm_gate/scale$", ("model",)),
+    ]
+    return [(pat, names) for pat, names in rules]
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(
+        functools.partial(model_init, cfg), jax.random.PRNGKey(0))
+
+
+def param_shardings(cfg: ArchConfig, mesh):
+    specs = shd.param_specs(abstract_params(cfg), param_rules(cfg), mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family in ("vlm", "audio"):
+        batch = {"embeds": _sds((b, s, cfg.d_model), cfg.jdtype)}
+        if cfg.n_codebooks:
+            batch["labels"] = _sds((b, s, cfg.n_codebooks), jnp.int32)
+        else:
+            batch["labels"] = _sds((b, s), jnp.int32)
+        if cfg.mrope_sections:
+            batch["positions"] = _sds((b, s, 3), jnp.int32)
+        return batch
+    return {"tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    batch = train_input_specs(cfg, shape)
+    batch.pop("labels", None)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None):
+    """(token inputs, abstract cache at the shape's seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    with shd.use_mesh(mesh):
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s))
+    if cfg.family in ("vlm", "audio"):
+        tok = {"embeds": _sds((b, 1, cfg.d_model), cfg.jdtype)}
+    elif cfg.n_codebooks:
+        tok = {"tokens": _sds((b, cfg.n_codebooks), jnp.int32)}
+    else:
+        tok = {"tokens": _sds((b,), jnp.int32)}
+    return tok, cache
+
+
+def batch_shardings(batch_specs, mesh):
+    """NamedShardings for a train/prefill batch: leading dim → "batch"."""
+
+    def one(x):
+        return NamedSharding(mesh, shd.logical_spec(x.shape, ["batch"], mesh))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def cache_shardings(cfg: ArchConfig, cache_specs, mesh):
+    """NamedShardings for a decode cache.
+
+    KV caches: [L, B, S, KVH, D] → (None, batch, seq, model, None); SSM
+    states: [L, B, H, ...] → (None, batch, model, ...); scalars replicated.
+    The logical translator drops non-dividing/duplicate axes (B=1 long-
+    context → sequence-sharded cache).
+    """
+
+    def one(path, x):
+        names = ["batch"]
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if pstr.endswith(("wkv", "ssd")) and x.ndim >= 4:
+            spec = shd.logical_spec(x.shape, [None, "batch", "model"], mesh)
+        elif pstr.endswith(("k", "v", "c_kv", "k_rope")) and x.ndim >= 3:
+            spec = shd.logical_spec(
+                x.shape, [None, "batch", "kvseq"], mesh)
+        elif x.ndim >= 2:
+            spec = shd.logical_spec(x.shape, [None, "batch"], mesh)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

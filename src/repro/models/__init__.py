@@ -1,0 +1,10 @@
+"""Model zoo substrate: pure-functional JAX decoders for the 10 assigned
+architectures plus the paper's own MLP/CNN networks."""
+from .config import ArchConfig
+from .transformer import (init_cache, model_decode, model_forward, model_init,
+                          model_loss, model_prefill)
+
+__all__ = [
+    "ArchConfig", "model_init", "model_forward", "model_loss",
+    "model_prefill", "model_decode", "init_cache",
+]

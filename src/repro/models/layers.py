@@ -1,0 +1,117 @@
+"""Shared neural-net building blocks (pure functional JAX, dict pytrees).
+
+Conventions:
+* params are nested dicts of jnp arrays; every function takes (params, x).
+* compute dtype follows the input; normalization statistics in f32.
+* init functions take an explicit PRNG key and an ArchConfig-ish scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in, d_out, *, bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(p, x, n_heads, eps=1e-5):
+    """GroupNorm with one group per head over the flattened head dim
+    (RWKV6's ln_x).  x: [..., H*D]."""
+    *lead, hd = x.shape
+    d = hd // n_heads
+    xf = x.astype(jnp.float32).reshape(*lead, n_heads, d)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, hd)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab, d, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+                      ).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def glu_mlp_init(key, d, d_ff, dtype=jnp.float32):
+    """Gated (SwiGLU) MLP — the LM-family feedforward."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "up": dense_init(k2, d, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def glu_mlp(p, x):
+    h = jax.nn.silu(dense(p["gate"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], h * dense(p["up"], x))
+
+
+# --- convolutions for the paper-scale CNNs ---------------------------------
+
+
+def conv2d_init(key, kh, kw, c_in, c_out, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(kh * kw * c_in)
+    return {
+        "w": (jax.random.normal(key, (kh, kw, c_in, c_out), jnp.float32)
+              * scale).astype(dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(p, x, *, stride=1, padding="SAME"):
+    """x: [B, H, W, C] NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def maxpool2(x):
+    """2×2 max-pool, stride 2. x: [B, H, W, C]."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

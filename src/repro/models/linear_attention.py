@@ -1,0 +1,187 @@
+"""Chunked linear attention with decaying state — the shared recurrence
+behind RWKV-6 (per-channel data-dependent decay) and Mamba-2 SSD (per-head
+scalar decay).
+
+Recurrence (per head; state S ∈ R^{dk×dv}):
+
+    S_t = diag(w_t)·S_{t−1} + k_tᵀ v_t
+    y_t = q_t·S_{t−1} + (q_t ⊙ u ⊙ k_t)·v_t          (u-bonus: RWKV only)
+
+Chunked evaluation processes blocks of L tokens with matmuls:
+  * cross-chunk:  y⁺_t = (q_t ⊙ exp(A_{t−1})) @ S_in,   A = cumsum(log w)
+  * state update: S_out = diag(exp(A_L))·S_in + Σ_s (exp(A_L−A_s) ⊙ k_s)ᵀ v_s
+  * intra-chunk:  scores[t,s] = Σ_c q_tc·k_sc·exp(A_{t−1,c} − A_{s,c}),  s<t
+
+Numerical stability: every exp() argument here is ≤ 0 — A is a cumsum of
+log-decays (negative) and the intra-chunk pairwise differences are masked to
+the causal region *before* exponentiation, where A_{t−1} ≤ A_s.  This makes
+the chunked form unconditionally overflow-free, unlike the common
+q·exp(A) / k·exp(−A) factorization (the per-factor exp(−A_s) overflows under
+strong decay).  The cost is the [L,L,dk] pairwise tensor, so L stays small
+(default 32); the recurrence is <2% of layer FLOPs at LM scale, projections
+dominate.
+
+All functions are vmapped over [B, H] leading dims.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_t(x, pad):
+    """Right-pad the time axis (axis 1) with zeros."""
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def chunked_vector_decay(
+    q,          # [B, S, H, dk]
+    k,          # [B, S, H, dk]
+    v,          # [B, S, H, dv]
+    log_w,      # [B, S, H, dk]  log-decay per channel (≤ 0)
+    u=None,     # [H, dk] bonus (RWKV time_faaaa) or None
+    s0=None,    # [B, H, dk, dv] initial state
+    chunk: int = 32,
+):
+    """Returns (y [B,S,H,dv], s_final [B,H,dk,dv]).  f32 internally."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # right-pad to a chunk multiple: log_w = 0 (decay 1) and k = 0 keep
+        # the carried state exact through the padding; pad outputs dropped.
+        pad = chunk - s % chunk
+        y, s_fin = chunked_vector_decay(
+            _pad_t(q, pad), _pad_t(k, pad), _pad_t(v, pad),
+            _pad_t(log_w, pad), u, s0=s0, chunk=chunk)
+        return y[:, :s], s_fin
+    n = s // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):  # [B,S,H,*] → [n, B, H, L, *]
+        return jnp.moveaxis(
+            x.reshape(b, n, chunk, h, -1), (1, 3), (0, 2)).astype(f32)
+
+    qc, kc, vc, wc = to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(log_w)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = s0.astype(f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def per_chunk(state, xs):
+        qb, kb, vb, wb = xs                   # [B,H,L,*]
+        a = jnp.cumsum(wb, axis=2)            # A_t (inclusive)        [B,H,L,dk]
+        a_prev = a - wb                       # A_{t−1}
+        # cross-chunk
+        y_cross = jnp.einsum("bhlc,bhcv->bhlv", qb * jnp.exp(a_prev), state)
+        # intra-chunk: pairwise decay differences, masked before exp
+        diff = a_prev[:, :, :, None, :] - a[:, :, None, :, :]  # [B,H,t,s,c]
+        diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhtc,bhsc,bhtsc->bhts", qb, kb, jnp.exp(diff))
+        if u is not None:
+            diag = jnp.einsum("bhlc,hc,bhlc->bhl", qb, u.astype(f32), kb)
+            scores = scores + diag[..., None] * jnp.eye(chunk, dtype=f32)
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+        # state update (all exp args ≤ 0)
+        a_last = a[:, :, -1:, :]                                # [B,H,1,dk]
+        k_hat = kb * jnp.exp(a_last - a)
+        state = (jnp.exp(a_last[:, :, 0, :, None]) * state
+                 + jnp.einsum("bhlc,bhlv->bhcv", k_hat, vb))
+        return state, y_cross + y_intra
+
+    s_final, ys = jax.lax.scan(per_chunk, s0, (qc, kc, vc, wc))
+    y = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(b, s, h, dv)
+    return y.astype(q.dtype), s_final
+
+
+def chunked_scalar_decay(
+    q,          # [B, S, H, dk]   (Mamba-2: C)
+    k,          # [B, S, H, dk]   (Mamba-2: B)
+    v,          # [B, S, H, dv]   (Mamba-2: Δ·x)
+    log_a,      # [B, S, H]       log-decay per head (≤ 0)
+    s0=None,    # [B, H, dk, dv]
+    chunk: int = 64,
+):
+    """Scalar-decay variant: decay matrices are [L,L] per head, scores are a
+    plain matmul — cheaper than the per-channel pairwise tensor."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        y, s_fin = chunked_scalar_decay(
+            _pad_t(q, pad), _pad_t(k, pad), _pad_t(v, pad),
+            _pad_t(log_a, pad), s0=s0, chunk=chunk)
+        return y[:, :s], s_fin
+    n = s // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(b, n, chunk, h, -1), (1, 3), (0, 2)).astype(f32)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ac = jnp.moveaxis(log_a.reshape(b, n, chunk, h), (1, 3), (0, 2)).astype(f32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = s0.astype(f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # include diagonal (SSD)
+
+    def per_chunk(state, xs):
+        # SSD semantics: y_t reads the *new* state h_t = a_t·h_{t−1} + k_t v_t,
+        # so every decay exponent uses the INCLUSIVE cumsum A_t:
+        #   cross:  exp(A_t)·h_in ;  intra (s ≤ t): exp(A_t − A_s)  (=1 at s=t)
+        qb, kb, vb, ab = xs                    # ab: [B,H,L]
+        a = jnp.cumsum(ab, axis=2)             # A_t inclusive
+        y_cross = jnp.einsum(
+            "bhlc,bhcv->bhlv", qb * jnp.exp(a)[..., None], state)
+        diff = a[:, :, :, None] - a[:, :, None, :]            # [B,H,t,s]
+        diff = jnp.where(tri[None, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhtc,bhsc->bhts", qb, kb) * jnp.exp(diff)
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+        a_last = a[:, :, -1]                                   # [B,H]
+        k_hat = kb * jnp.exp(a_last[:, :, None] - a)[..., None]
+        state = (jnp.exp(a_last)[:, :, None, None] * state
+                 + jnp.einsum("bhlc,bhlv->bhcv", k_hat, vb))
+        return state, y_cross + y_intra
+
+    s_final, ys = jax.lax.scan(per_chunk, s0, (qc, kc, vc, ac))
+    y = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(b, s, h, dv)
+    return y.astype(q.dtype), s_final
+
+
+# --- single-token recurrent steps (decode) ---------------------------------
+
+
+def step_vector_decay(q1, k1, v1, log_w1, u, state):
+    """One token.  q1/k1/log_w1: [B,H,dk], v1: [B,H,dv], state [B,H,dk,dv].
+    RWKV-6 order: y uses S_{t−1} plus the u-bonus for the current token."""
+    f32 = jnp.float32
+    q1, k1, v1 = q1.astype(f32), k1.astype(f32), v1.astype(f32)
+    y = jnp.einsum("bhc,bhcv->bhv", q1, state)
+    if u is not None:
+        bonus = jnp.einsum("bhc,hc,bhc->bh", q1, u.astype(f32), k1)
+        y = y + bonus[..., None] * v1
+    state = (jnp.exp(log_w1.astype(f32))[..., None] * state
+             + k1[..., None] * v1[..., None, :])
+    return y, state
+
+
+def step_scalar_decay(q1, k1, v1, log_a1, state):
+    """One token, Mamba-2 SSD semantics: state updates first (decay applies
+    to the previous state), y reads the NEW state.
+    log_a1: [B,H]."""
+    f32 = jnp.float32
+    q1, k1, v1 = q1.astype(f32), k1.astype(f32), v1.astype(f32)
+    state = (jnp.exp(log_a1.astype(f32))[..., None, None] * state
+             + k1[..., None] * v1[..., None, :])
+    y = jnp.einsum("bhc,bhcv->bhv", q1, state)
+    return y, state

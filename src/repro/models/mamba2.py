@@ -1,0 +1,133 @@
+"""Mamba-2 block (SSD — state-space duality), used by the zamba2 hybrid.
+
+Structure per block: in_proj → (z, xBC, dt); causal depthwise conv over xBC;
+SSD recurrence with per-head scalar decay a_t = exp(−Δ_t·exp(A_log)); skip
+D·x; gated RMSNorm (y·silu(z)); out_proj.  n_groups = 1 (B/C shared across
+heads).  State per layer: conv tail [B, K−1, conv_dim] + SSD state
+[B, H, N, P] — O(1) in sequence length (zamba2 runs long_500k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+from .linear_attention import chunked_scalar_decay, step_scalar_decay
+
+CONV_K = 4
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_p = cfg.ssm_head_dim
+    n_heads = d_inner // head_p
+    n_state = cfg.ssm_state
+    conv_dim = d_inner + 2 * n_state
+    return d_inner, head_p, n_heads, n_state, conv_dim
+
+
+def mamba2_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, head_p, n_heads, n_state, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm_in": rmsnorm_init(d, dtype),
+        "in_proj": dense_init(
+            ks[0], d, 2 * d_inner + 2 * n_state + n_heads, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),        # A = −exp(a_log)
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_gate": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype=dtype),
+    }
+
+
+def mamba2_state_init(cfg, batch, dtype=jnp.float32):
+    d_inner, head_p, n_heads, n_state, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, n_heads, n_state, head_p), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, tail):
+    """Depthwise causal conv1d.  x: [B,S,C]; tail: [B,K−1,C] history.
+    Returns (y [B,S,C], new_tail)."""
+    kk, c = w.shape
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    # grouped 1-D conv: kernel [K, I/groups=1, O=C], groups = C (depthwise)
+    y = jax.lax.conv_general_dilated(
+        xp, w.astype(x.dtype)[:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return y + b.astype(x.dtype), xp[:, -(kk - 1):, :]
+
+
+def _split_proj(p, x, cfg):
+    d_inner, head_p, n_heads, n_state, conv_dim = _dims(cfg)
+    zxbcdt = dense(p["in_proj"], x)
+    return jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+
+def mamba2_block(p, x, state, cfg, *, chunk=64):
+    """x: [B,S,d] → (x + mixer(x), new_state)."""
+    b, s, d = x.shape
+    d_inner, head_p, n_heads, n_state, conv_dim = _dims(cfg)
+    xn = rmsnorm(p["norm_in"], x)
+    z, xbc, dt = _split_proj(p, xn, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    x_ssm, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    x_ssm = x_ssm.reshape(b, s, n_heads, head_p)
+    bmat = jnp.broadcast_to(bmat[:, :, None, :], (b, s, n_heads, n_state))
+    cmat = jnp.broadcast_to(cmat[:, :, None, :], (b, s, n_heads, n_state))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B,S,H]
+    log_a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt      # ≤ 0
+    v = x_ssm.astype(jnp.float32) * dt[..., None]
+    y, ssd = chunked_scalar_decay(cmat, bmat, v.astype(x.dtype), log_a,
+                                  s0=state["ssd"], chunk=chunk)
+    y = (y.astype(jnp.float32)
+         + p["d_skip"].astype(jnp.float32)[None, None, :, None]
+         * x_ssm.astype(jnp.float32))
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm_gate"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = dense(p["out_proj"], y)
+    return x + out, {"conv": conv_tail, "ssd": ssd}
+
+
+def mamba2_block_step(p, x1, state, cfg):
+    """Single-token decode.  x1: [B,d]."""
+    b, d = x1.shape
+    d_inner, head_p, n_heads, n_state, conv_dim = _dims(cfg)
+    xn = rmsnorm(p["norm_in"], x1)
+    z, xbc, dt = _split_proj(p, xn[:, None, :], cfg)
+    z, xbc, dt = z[:, 0], xbc[:, 0], dt[:, 0]
+    # conv over (tail ++ this token)
+    window = jnp.concatenate(
+        [state["conv"].astype(xbc.dtype), xbc[:, None, :]], axis=1)
+    y_conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xbc.dtype))
+    xbc = jax.nn.silu((y_conv + p["conv_b"].astype(xbc.dtype))
+                      .astype(jnp.float32)).astype(x1.dtype)
+    x_ssm, bvec, cvec = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    x_ssm = x_ssm.reshape(b, n_heads, head_p)
+    bvec = jnp.broadcast_to(bvec[:, None, :], (b, n_heads, n_state))
+    cvec = jnp.broadcast_to(cvec[:, None, :], (b, n_heads, n_state))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    log_a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt      # [B,H]
+    v = x_ssm.astype(jnp.float32) * dt[..., None]
+    y, ssd = step_scalar_decay(cvec, bvec, v.astype(x1.dtype), log_a,
+                               state["ssd"])
+    y = (y + p["d_skip"].astype(jnp.float32)[None, :, None]
+         * x_ssm.astype(jnp.float32))
+    y = y.reshape(b, d_inner).astype(x1.dtype)
+    y = rmsnorm(p["norm_gate"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype))
+    out = dense(p["out_proj"], y)
+    return x1 + out, {"conv": window[:, 1:, :], "ssd": ssd}

@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are low-rank compressed; only the compressed latent c_kv
+(kv_lora_rank) plus the shared decoupled-RoPE key k_rope are cached.  Two
+execution forms:
+
+* expand form (train / prefill): decompress K/V per position and run
+  standard causal attention — matmul-friendly at full sequence length.
+* absorbed form (decode): fold W_UK into the query and W_UV into the
+  output so attention runs directly against the compressed cache —
+  per-step FLOPs O(H·(r + d_rope)) per cached token instead of
+  O(H·(d_nope + d_rope)), and cache bytes per token are
+  (kv_lora_rank + d_rope) instead of 2·H·d_head (~ 18× smaller for V3).
+
+Equivalence of the two forms is asserted in tests/test_models.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import chunked_causal_attention, NEG_INF
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+
+def mla_init(key, cfg, dtype):
+    """cfg needs: d_model, n_heads, q_lora_rank, kv_lora_rank,
+    qk_nope_head_dim, qk_rope_head_dim, v_head_dim."""
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {
+        "wkv_a": dense_init(ks[0], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                            dtype=dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[1], cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+                            dtype=dtype),
+        "wo": dense_init(ks[2], h * cfg.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[3], cfg.d_model, cfg.q_lora_rank, dtype=dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[4], cfg.q_lora_rank, h * qd, dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[3], cfg.d_model, h * qd, dtype=dtype)
+    return p
+
+
+def _queries(p, x, cfg):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(b, s, h, qd)
+    return jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)  # nope, rope
+
+
+def _kv_latent(p, x, cfg, positions):
+    """Returns (c_kv [B,S,r] normalized, k_rope [B,S,1,dr] rotated)."""
+    ckv_full = dense(p["wkv_a"], x)
+    c_kv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, positions, cfg, *, q_block=512, kv_block=512,
+                  impl="masked"):
+    """Expand-form causal MLA over a full sequence.
+
+    Returns (y [B,S,d_model], cache = (c_kv, k_rope squeezed)).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q_nope, q_rope = _queries(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _kv_latent(p, x, cfg, positions)
+
+    kv = dense(p["wkv_b"], c_kv).reshape(b, s, h, dn + dv)
+    k_nope, v = jnp.split(kv, [dn], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    attn = chunked_causal_attention(
+        q, k, v, q_block=q_block, kv_block=kv_block, impl=impl)
+    y = dense(p["wo"], attn.reshape(b, s, h * dv))
+    return y, (c_kv, k_rope[:, :, 0, :])
+
+
+def _absorb_weights(p, cfg):
+    """Split wkv_b into per-head W_UK [r,H,dn] and W_UV [r,H,dv]."""
+    h = cfg.n_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    wkv_b = p["wkv_b"]["w"].reshape(cfg.kv_lora_rank, h, dn + dv)
+    return wkv_b[..., :dn], wkv_b[..., dn:]
+
+
+def mla_decode(p, x1, cache, length, cfg):
+    """Absorbed-form single-token decode.
+
+    x1: [B, 1, d_model]; cache = (c_kv [B,Smax,r], k_rope [B,Smax,dr]),
+    already containing this token's entries at position length−1.
+    """
+    b = x1.shape[0]
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    c_cache, r_cache = cache
+    pos = jnp.full((b, 1), length - 1, jnp.int32)
+
+    q_nope, q_rope = _queries(p, x1, cfg)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)        # [B,1,H,dr]
+    w_uk, w_uv = _absorb_weights(p, cfg)
+
+    # fold W_UK into the query: q_eff [B,H,r]
+    q_eff = jnp.einsum("bhd,rhd->bhr",
+                       q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_eff,
+                   c_cache.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                     r_cache.astype(jnp.float32))
+    ) / np.sqrt(dn + dr)
+    idx = jnp.arange(c_cache.shape[1])
+    scores = jnp.where(idx[None, None, :] < length, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, c_cache.astype(jnp.float32))
+    attn = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    y = dense(p["wo"], attn.reshape(b, 1, -1).astype(x1.dtype))
+    return y
+
+
+def mla_cache_update(p, x1, cache, length, cfg):
+    """Compute this token's (c_kv, k_rope) and write them at length−1."""
+    b = x1.shape[0]
+    pos = jnp.full((b, 1), length - 1, jnp.int32)
+    c_kv, k_rope = _kv_latent(p, x1, cfg, pos)
+    c_cache, r_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_kv.astype(c_cache.dtype), length - 1, 1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        r_cache, k_rope[:, :, 0, :].astype(r_cache.dtype), length - 1, 1)
+    return c_cache, r_cache

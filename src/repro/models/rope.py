@@ -1,0 +1,54 @@
+"""Rotary position embeddings — standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191) splits the rotary half-dim into
+three sections (temporal, height, width) and rotates each section with its
+own position id.  For pure text all three ids are equal, which reduces
+M-RoPE exactly to 1-D RoPE — tested in tests/test_models.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [d_head//2] (f32)."""
+    half = d_head // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate x: [..., S, H, D] by per-token positions [..., S] (int32)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                         # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE.  x: [B, S, H, D]; positions3: [B, S, 3] (t, h, w).
+
+    ``sections`` partitions the half-dim (sum(sections) == D//2); section i
+    rotates with positions3[..., i].
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                          # [D/2]
+    # build per-frequency position ids by section
+    sec_id = np.concatenate([
+        np.full((s,), i, np.int32) for i, s in enumerate(sections)
+    ])                                                  # [D/2]
+    pos = jnp.take(positions3, jnp.asarray(sec_id), axis=-1)   # [B, S, D/2]
+    ang = pos.astype(jnp.float32) * inv                 # [B, S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [B, S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,92 @@
+"""The paper's own experiment networks (§3).
+
+* ``mlp``        — sigmoidal feedforward nets: 2-2-1 (XOR), n-n-1 (parity),
+  49-4-4 (NIST7x7).  Supports per-neuron activation defects (§3.5, Fig. 10).
+* ``cnn``        — the Fashion-MNIST 2-conv and CIFAR-10 3-conv nets of
+  Table 2 (3×3 convs + 2×2 max-pools + linear head, no softmax; MSE cost on
+  one-hot targets, exactly as the paper specifies).
+
+The paper's CNN layer widths are given but the exact head wiring is
+ambiguous ("converted the 256 outputs"); we pool CIFAR to 2×2×64 = 256 and
+Fashion-MNIST to 7×7×32, and record our parameter counts in EXPERIMENTS.md
+next to the paper's (26154 / 14378).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import ActivationDefects, defective_sigmoid
+from .layers import conv2d, conv2d_init, dense, dense_init, maxpool2
+
+
+# --- fully-connected sigmoid nets ------------------------------------------
+
+
+def mlp_init(key, sizes: Sequence[int]):
+    """sizes e.g. (2, 2, 1) — weights N(0,1)/sqrt(fan_in), biases zero."""
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [dense_init(k, a, b, bias=True, dtype=jnp.float32)
+            for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(params, x, defects: Optional[Sequence[ActivationDefects]] = None):
+    """Sigmoid MLP; ``defects[i]`` (optional) deforms layer i's activations."""
+    for i, p in enumerate(params):
+        x = dense(p, x)
+        if defects is not None and defects[i] is not None:
+            x = defective_sigmoid(x, defects[i])
+        else:
+            x = jax.nn.sigmoid(x)
+    return x
+
+
+# --- the paper's CNNs -------------------------------------------------------
+
+
+def cnn_init(key, *, in_hw, in_ch, channels, n_classes, head_pool):
+    """channels e.g. (16, 32) fmnist / (16, 32, 64) cifar."""
+    ks = jax.random.split(key, len(channels) + 1)
+    convs = []
+    c = in_ch
+    hw = in_hw
+    for k, co in zip(ks, channels):
+        convs.append(conv2d_init(k, 3, 3, c, co))
+        c = co
+        hw //= 2
+    while hw > head_pool:  # extra pools to reach the paper's head width
+        hw //= 2
+    feat = hw * hw * c
+    return {"convs": convs,
+            "fc": dense_init(ks[-1], feat, n_classes, bias=True)}
+
+
+def cnn_apply(params, x, *, head_pool):
+    """x: [B,H,W,C] → class scores [B,n_classes] (no softmax, per paper)."""
+    for p in params["convs"]:
+        x = jax.nn.relu(conv2d(p, x))
+        x = maxpool2(x)
+    while x.shape[1] > head_pool:
+        x = maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    return dense(params["fc"], x)
+
+
+def fashion_cnn_init(key):
+    return cnn_init(key, in_hw=28, in_ch=1, channels=(16, 32),
+                    n_classes=10, head_pool=7)
+
+
+def fashion_cnn_apply(params, x):
+    return cnn_apply(params, x, head_pool=7)
+
+
+def cifar_cnn_init(key):
+    return cnn_init(key, in_hw=32, in_ch=3, channels=(16, 32, 64),
+                    n_classes=10, head_pool=2)
+
+
+def cifar_cnn_apply(params, x):
+    return cnn_apply(params, x, head_pool=2)

@@ -1,0 +1,480 @@
+"""Decoder assembly for all 10 assigned architectures.
+
+One set of entry points, family-dispatched:
+
+    model_init(cfg, key)                  → params (stacked-layer pytree)
+    model_forward(params, cfg, batch)     → logits          (train/prefill)
+    model_loss(params, cfg, batch)        → scalar xent     (MGD's loss_fn)
+    init_cache(cfg, batch, max_len)       → decode cache/state
+    model_prefill(params, cfg, batch, max_len) → (logits, cache)
+    model_decode(params, cfg, tokens, cache)   → (logits, cache)
+
+Layers are stacked on a leading L dim and driven by ``lax.scan`` — one
+layer's HLO regardless of depth (compile-time and GSPMD-friendliness at
+88-layer scale).  Activation sharding uses logical axis names translated
+against whatever mesh is active (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .attention import chunked_causal_attention, decode_attention
+from .config import ArchConfig
+from .layers import (dense, dense_init, embed, embedding_init, glu_mlp,
+                     glu_mlp_init, rmsnorm, rmsnorm_init)
+from .mamba2 import (mamba2_block, mamba2_block_init, mamba2_block_step,
+                     mamba2_state_init)
+from .mla import (mla_attention, mla_cache_update, mla_decode, mla_init)
+from .moe import moe_apply, moe_init
+from .rope import apply_mrope, apply_rope
+from .rwkv6 import (rwkv6_block, rwkv6_block_init, rwkv6_block_step,
+                    rwkv6_state_init)
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-layer
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ArchConfig, dtype):
+    h, kvh, dh, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, kvh * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, kvh * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _rope(cfg, x, positions):
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _qkv(p, x, positions, cfg):
+    b, s, d = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, dh)
+    k = dense(p["wk"], x).reshape(b, s, kvh, dh)
+    v = dense(p["wv"], x).reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    return q, k, v
+
+
+def attn_apply(p, x, positions, cfg: ArchConfig):
+    """Full-sequence causal attention.  Returns (y, (k, v) for caching)."""
+    b, s, d = x.shape
+    q, k, v = _qkv(p, x, positions, cfg)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    y = chunked_causal_attention(
+        q, k, v, q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+        impl=cfg.attn_impl)
+    y = dense(p["wo"], y.reshape(b, s, -1))
+    return y, (k, v)
+
+
+def attn_decode_step(p, x1, positions, kcache, vcache, length, cfg):
+    """x1: [B,1,d].  Caches [B,Smax,KVH,dh]; entry written at length−1."""
+    b = x1.shape[0]
+    q, k, v = _qkv(p, x1, positions, cfg)
+    kcache = jax.lax.dynamic_update_slice_in_dim(
+        kcache, k.astype(kcache.dtype), length - 1, 1)
+    vcache = jax.lax.dynamic_update_slice_in_dim(
+        vcache, v.astype(vcache.dtype), length - 1, 1)
+    y = decode_attention(q, kcache, vcache, length)
+    y = dense(p["wo"], y.reshape(b, 1, -1))
+    return y, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer (dense / moe / mla variants)
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ArchConfig, dtype):
+    ka, km = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+         "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.use_mla:
+        p["attn"] = mla_init(ka, cfg, dtype)
+    else:
+        p["attn"] = attn_init(ka, cfg, dtype)
+    if cfg.n_experts:
+        p["moe"] = moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = glu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _mlp_part(p, x, cfg):
+    if cfg.n_experts:
+        y = moe_apply(p["moe"], x, cfg, group_size=cfg.moe_group_size,
+                      capacity_factor=cfg.moe_capacity_factor)
+    else:
+        y = glu_mlp(p["mlp"], x)
+    return y
+
+
+def block_apply(p, x, positions, cfg: ArchConfig):
+    """Pre-norm residual block.  Returns (x', kv-cache payload)."""
+    seq_ax = "sp" if cfg.seq_parallel else None
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        att, cache = mla_attention(
+            p["attn"], xn, positions, cfg,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            impl=cfg.attn_impl)
+    else:
+        att, cache = attn_apply(p["attn"], xn, positions, cfg)
+    x = x + att
+    x = shard(x, "batch", seq_ax, None)
+    y = _mlp_part(p, rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    x = x + y
+    return shard(x, "batch", seq_ax, None), cache
+
+
+def block_decode(p, x1, positions, layer_cache, length, cfg: ArchConfig):
+    xn = rmsnorm(p["ln1"], x1, cfg.norm_eps)
+    if cfg.use_mla:
+        cache = mla_cache_update(p["attn"], xn, layer_cache, length, cfg)
+        att = mla_decode(p["attn"], xn, cache, length, cfg)
+    else:
+        kc, vc = layer_cache
+        att, kc, vc = attn_decode_step(
+            p["attn"], xn, positions, kc, vc, length, cfg)
+        cache = (kc, vc)
+    x1 = x1 + att
+    y = _mlp_part(p, rmsnorm(p["ln2"], x1, cfg.norm_eps), cfg)
+    return x1 + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    n_tables = max(cfg.n_codebooks, 1)
+    p = {"tok": embedding_init(k1, cfg.vocab * n_tables, cfg.d_model, dtype),
+         "ln_f": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        head_out = cfg.vocab * n_tables
+        p["head"] = dense_init(k2, cfg.d_model, head_out, dtype=dtype)
+    return p
+
+
+def _embed_tokens(p, cfg: ArchConfig, batch):
+    """Tokens or precomputed (stub-frontend) embeddings → [B,S,d]."""
+    if "embeds" in batch:
+        x = batch["embeds"]
+    elif cfg.n_codebooks:
+        # musicgen: tokens [B, nq, S]; codebook i uses table slice i
+        toks = batch["tokens"]
+        b, nq, s = toks.shape
+        offs = (jnp.arange(nq, dtype=toks.dtype) * cfg.vocab)[None, :, None]
+        x = embed(p["tok"], toks + offs).sum(axis=1)
+    else:
+        x = embed(p["tok"], batch["tokens"])
+    return shard(x, "batch", "sp" if cfg.seq_parallel else None, None)
+
+
+def _logits(p, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"]["table"].T
+    else:
+        logits = dense(p["head"], x)
+    logits = shard(logits, "batch", None, "model")
+    if cfg.n_codebooks:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab)
+    return logits
+
+
+def _positions(cfg: ArchConfig, batch, s, b):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (b, s, 3))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Model: init / forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_keys(key, n):
+    return jax.random.split(key, n)
+
+
+def model_init(cfg: ArchConfig, key):
+    dtype = cfg.jdtype
+    k_emb, k_layers, k_shared = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"embed": _embed_init(k_emb, cfg, dtype)}
+    if cfg.family == "ssm":
+        init_one = functools.partial(rwkv6_block_init, cfg=cfg, dtype=dtype)
+        params["layers"] = jax.vmap(init_one)(_layer_keys(k_layers, cfg.n_layers))
+    elif cfg.family == "hybrid":
+        n_mamba, n_shared_calls = _hybrid_plan(cfg)
+        init_one = functools.partial(mamba2_block_init, cfg=cfg, dtype=dtype)
+        params["layers"] = jax.vmap(init_one)(_layer_keys(k_layers, n_mamba))
+        params["shared_attn"] = block_init(k_shared, cfg, dtype)
+    else:
+        init_one = functools.partial(block_init, cfg=cfg, dtype=dtype)
+        params["layers"] = jax.vmap(init_one)(_layer_keys(k_layers, cfg.n_layers))
+    return params
+
+
+def _hybrid_plan(cfg: ArchConfig):
+    """zamba2: n_layers counts mamba blocks + shared-attn invocations.
+    With attn_every = k: groups of (k mamba + 1 shared attn)."""
+    k = cfg.attn_every
+    group = k + 1
+    n_groups = cfg.n_layers // group
+    n_mamba = n_groups * k
+    return n_mamba, n_groups
+
+
+def model_forward(params, cfg: ArchConfig, batch, *, return_state=False,
+                  state=None):
+    """Full-sequence forward → logits [B,S,V].  For ssm/hybrid, optionally
+    returns the recurrent state (prefill path)."""
+    x = _embed_tokens(params["embed"], cfg, batch)
+    b, s, _ = x.shape
+    positions = _positions(cfg, batch, s, b)
+
+    if cfg.family == "ssm":
+        if state is None:
+            state = jax.vmap(
+                lambda _: rwkv6_state_init(cfg, b), axis_size=cfg.n_layers,
+                out_axes=0)(jnp.arange(cfg.n_layers))
+
+        def body(x, layer):
+            lp, st = layer
+            x, st = rwkv6_block(lp, x, st, cfg, chunk=cfg.la_chunk)
+            return x, st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    elif cfg.family == "hybrid":
+        n_mamba, n_groups = _hybrid_plan(cfg)
+        k = cfg.attn_every
+        if state is None:
+            state = {
+                "mamba": jax.vmap(
+                    lambda _: mamba2_state_init(cfg, b), axis_size=n_mamba,
+                    out_axes=0)(jnp.arange(n_mamba)),
+                "attn_kv": None,
+            }
+        lp_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["layers"])
+        st_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), state["mamba"])
+
+        def body(x, layer):
+            lps, sts = layer
+
+            def inner(x, one):
+                lp, st = one
+                x, st = mamba2_block(lp, x, st, cfg, chunk=cfg.la_chunk)
+                return x, st
+
+            x, new_sts = jax.lax.scan(inner, x, (lps, sts))
+            x, kv = block_apply(params["shared_attn"], x, positions, cfg)
+            return x, (new_sts, kv)
+
+        x, (new_m, kvs) = jax.lax.scan(body, x, (lp_grouped, st_grouped))
+        new_state = {
+            "mamba": jax.tree_util.tree_map(
+                lambda a: a.reshape(n_mamba, *a.shape[2:]), new_m),
+            "attn_kv": kvs,
+        }
+    else:
+        def body(x, lp):
+            x, kv = block_apply(lp, x, positions, cfg)
+            return x, kv
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        new_state = kvs
+
+    x = rmsnorm(params["embed"]["ln_f"], x, cfg.norm_eps)
+    logits = _logits(params["embed"], cfg, x)
+    if return_state:
+        return logits, new_state
+    return logits
+
+
+def model_loss(params, cfg: ArchConfig, batch):
+    """Token-mean softmax cross-entropy — MGD's scalar cost."""
+    logits = model_forward(params, cfg, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int):
+    dtype = cfg.jdtype
+    if cfg.family == "ssm":
+        st = jax.vmap(lambda _: rwkv6_state_init(cfg, batch_size),
+                      axis_size=cfg.n_layers, out_axes=0)(
+            jnp.arange(cfg.n_layers))
+        return {"state": st, "length": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_mamba, n_groups = _hybrid_plan(cfg)
+        st = jax.vmap(lambda _: mamba2_state_init(cfg, batch_size),
+                      axis_size=n_mamba, out_axes=0)(jnp.arange(n_mamba))
+        kvh, dh = cfg.kv_heads, cfg.head_dim
+        kv = jnp.zeros((n_groups, batch_size, max_len, kvh, dh), dtype)
+        kv = shard(kv, None, "batch", "kvseq", None, None)
+        return {"state": st, "k": kv, "v": kv,
+                "length": jnp.zeros((), jnp.int32)}
+    if cfg.use_mla:
+        c = jnp.zeros((cfg.n_layers, batch_size, max_len, cfg.kv_lora_rank),
+                      dtype)
+        r = jnp.zeros((cfg.n_layers, batch_size, max_len,
+                       cfg.qk_rope_head_dim), dtype)
+        return {"c_kv": shard(c, None, "batch", "kvseq", None),
+                "k_rope": shard(r, None, "batch", "kvseq", None),
+                "length": jnp.zeros((), jnp.int32)}
+    kvh, dh = cfg.kv_heads, cfg.head_dim
+    kv = jnp.zeros((cfg.n_layers, batch_size, max_len, kvh, dh), dtype)
+    kv = shard(kv, None, "batch", "kvseq", None, None)
+    return {"k": kv, "v": kv, "length": jnp.zeros((), jnp.int32)}
+
+
+def model_prefill(params, cfg: ArchConfig, batch, max_len: int):
+    """Run the prompt; returns (full-seq logits, ready-to-decode cache)."""
+    b = (batch["tokens"].shape[0] if "tokens" in batch
+         else batch["embeds"].shape[0])
+    s = (batch["tokens"].shape[-1] if "tokens" in batch
+         else batch["embeds"].shape[1])
+    logits, st = model_forward(params, cfg, batch, return_state=True)
+    length = jnp.asarray(s, jnp.int32)
+    if cfg.family == "ssm":
+        return logits, {"state": st, "length": length}
+    if cfg.family == "hybrid":
+        cache = init_cache(cfg, b, max_len)
+        kvs = st["attn_kv"]  # ([G,B,S,kvh,dh], [G,B,S,kvh,dh])
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kvs[0].astype(cache["k"].dtype), 0, 2)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], kvs[1].astype(cache["v"].dtype), 0, 2)
+        return logits, {"state": st["mamba"], "k": k, "v": v,
+                        "length": length}
+    cache = init_cache(cfg, b, max_len)
+    if cfg.use_mla:
+        c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], st[0].astype(cache["c_kv"].dtype), 0, 2)
+        r = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], st[1].astype(cache["k_rope"].dtype), 0, 2)
+        return logits, {"c_kv": c, "k_rope": r, "length": length}
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], st[0].astype(cache["k"].dtype), 0, 2)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], st[1].astype(cache["v"].dtype), 0, 2)
+    return logits, {"k": k, "v": v, "length": length}
+
+
+def model_decode(params, cfg: ArchConfig, tokens, cache, embeds=None):
+    """One decode step.  tokens: [B] int32 (or embeds [B,1,d] for stub
+    frontends).  Returns (logits [B,V...], new cache)."""
+    if embeds is not None:
+        x1 = embeds
+    elif cfg.n_codebooks:
+        offs = (jnp.arange(cfg.n_codebooks, dtype=tokens.dtype)
+                * cfg.vocab)[None, :]
+        x1 = embed(params["embed"]["tok"], tokens + offs).sum(axis=1)[:, None, :]
+    else:
+        x1 = embed(params["embed"]["tok"], tokens)[:, None, :]
+    b = x1.shape[0]
+    length = cache["length"] + 1
+    pos = jnp.full((b, 1), length - 1, jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+
+    if cfg.family == "ssm":
+        def body(x, layer):
+            lp, st = layer
+            y, st = rwkv6_block_step(lp, x[:, 0, :], st, cfg)
+            return y[:, None, :], st
+
+        x1, new_state = jax.lax.scan(body, x1, (params["layers"],
+                                                cache["state"]))
+        new_cache = {"state": new_state, "length": length}
+    elif cfg.family == "hybrid":
+        n_mamba, n_groups = _hybrid_plan(cfg)
+        k = cfg.attn_every
+        lp_g = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["layers"])
+        st_g = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), cache["state"])
+
+        def body(x, layer):
+            lps, sts, kc, vc = layer
+
+            def inner(x, one):
+                lp, st = one
+                y, st = mamba2_block_step(lp, x[:, 0, :], st, cfg)
+                return y[:, None, :], st
+
+            x, new_sts = jax.lax.scan(inner, x, (lps, sts))
+            x, (kc, vc) = block_decode(
+                params["shared_attn"], x, pos, (kc, vc), length, cfg)
+            return x, (new_sts, kc, vc)
+
+        x1, (new_m, kc, vc) = jax.lax.scan(
+            body, x1, (lp_g, st_g, cache["k"], cache["v"]))
+        new_cache = {
+            "state": jax.tree_util.tree_map(
+                lambda a: a.reshape(n_mamba, *a.shape[2:]), new_m),
+            "k": kc, "v": vc, "length": length,
+        }
+    elif cfg.use_mla:
+        def body(x, layer):
+            lp, cc, rr = layer
+            x, (cc, rr) = block_decode(lp, x, pos, (cc, rr), length, cfg)
+            return x, (cc, rr)
+
+        x1, (c, r) = jax.lax.scan(
+            body, x1, (params["layers"], cache["c_kv"], cache["k_rope"]))
+        new_cache = {"c_kv": c, "k_rope": r, "length": length}
+    else:
+        def body(x, layer):
+            lp, kc, vc = layer
+            x, (kc, vc) = block_decode(lp, x, pos, (kc, vc), length, cfg)
+            return x, (kc, vc)
+
+        x1, (kc, vc) = jax.lax.scan(
+            body, x1, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": kc, "v": vc, "length": length}
+
+    x1 = rmsnorm(params["embed"]["ln_f"], x1, cfg.norm_eps)
+    logits = _logits(params["embed"], cfg, x1)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,2 @@
+"""First-order baseline optimizers (the paper's comparison axis)."""
+from .sgd import sgd_init, sgd_step

@@ -1,0 +1,33 @@
+"""Plain SGD (+ optional momentum) — the backprop baseline optimizer.
+
+The paper compares MGD against backprop + SGD without momentum (§3.6); we
+keep the baseline exactly that simple, with momentum available for the
+beyond-paper comparisons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum:
+        return {"m": jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+    return {}
+
+
+def sgd_step(params, grads, state, *, eta: float, momentum: float = 0.0):
+    if momentum:
+        m = jax.tree_util.tree_map(
+            lambda mi, gi: momentum * mi + gi.astype(jnp.float32),
+            state["m"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, mi: (p.astype(jnp.float32) - eta * mi).astype(p.dtype),
+            params, m)
+        return new_params, {"m": m}
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - eta * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, state

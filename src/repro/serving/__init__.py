@@ -1,0 +1,2 @@
+"""Serving substrate: batched prefill + decode loops with KV/SSM caches."""
+from .decode import serve_batch, greedy_generate

@@ -1,0 +1,66 @@
+"""Batched serving: prefill a prompt batch, then step the decoder.
+
+Static-batch continuous decoding: one jitted ``decode_step`` is reused for
+every token (cache donated, length carried in-cache).  Greedy and
+temperature sampling; per-request stop handling via an ``alive`` mask so a
+finished request stops contributing compute-visible tokens (its slot keeps
+cycling — the production pattern for fixed-shape serving on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, model_decode, model_prefill
+
+
+def _sample(logits, key, temperature):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def greedy_generate(params, cfg, prompts, max_new: int, *,
+                    temperature: float = 0.0, seed: int = 0,
+                    eos_id: Optional[int] = None):
+    """prompts: [B, S_prompt] int32 → generated [B, max_new] int32."""
+    b, s_prompt = prompts.shape
+    max_len = s_prompt + max_new
+    logits, cache = model_prefill(params, cfg, {"tokens": prompts}, max_len)
+    last = logits[:, -1]
+
+    decode = jax.jit(functools.partial(model_decode, cfg=cfg),
+                     donate_argnames=("cache",))
+
+    key = jax.random.PRNGKey(seed)
+    toks = _sample(last, key, temperature)
+    out = [toks]
+    alive = jnp.ones((b,), bool)
+    for t in range(1, max_new):
+        key = jax.random.fold_in(key, t)
+        logits, cache = decode(params, tokens=toks, cache=cache)
+        toks = _sample(logits, key, temperature)
+        if eos_id is not None:
+            alive = alive & (out[-1] != eos_id)
+            toks = jnp.where(alive, toks, eos_id)
+        out.append(toks)
+    return jnp.stack(out, axis=1)
+
+
+def serve_batch(params, cfg, requests, max_new: int, **kw):
+    """Pad a ragged request list to a rectangular batch and generate.
+
+    requests: list of 1-D int32 arrays.  Left-pads with 0 (positions still
+    causal; synthetic serving path used by examples/serve_lm.py).
+    """
+    b = len(requests)
+    s = max(int(r.shape[0]) for r in requests)
+    batch = jnp.zeros((b, s), jnp.int32)
+    for i, r in enumerate(requests):
+        batch = batch.at[i, s - r.shape[0]:].set(r)
+    return greedy_generate(params, cfg, batch, max_new, **kw)

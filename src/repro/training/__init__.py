@@ -1,0 +1,2 @@
+"""Training substrate: MGD/backprop loops, checkpointing, fault tolerance."""
+from . import checkpoint, train_loop

@@ -1,0 +1,147 @@
+"""Training drivers: MGD (the paper) and backprop+SGD (the baseline).
+
+Both loops share the same loss_fn / sampler interfaces so every comparison
+in benchmarks/ runs the two algorithms on identical models and data.  The
+MGD loop scans ``chunk`` iterations per device program (τ_x handled inside
+the scan via index-seeded samplers), checkpoints periodically, and resumes
+deterministically — the perturbation sequence is a pure function of the
+global step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.optim import sgd_init, sgd_step
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    state: Any
+    history: list          # list of (step, metric dict)
+    steps_done: int
+
+
+def train_mgd(
+    loss_fn: Callable,
+    params,
+    cfg: MGDConfig,
+    sample_fn: Callable,          # sample_fn(sample_index) -> batch
+    num_steps: int,
+    *,
+    chunk: int = 100,
+    eval_fn: Optional[Callable] = None,    # eval_fn(params) -> dict
+    eval_every: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: bool = True,
+    log: Optional[Callable] = print,
+) -> TrainResult:
+    """Run MGD for ``num_steps`` iterations (τ_p ticks)."""
+    state = mgd_init(params, cfg)
+    start_step = 0
+    if checkpoint_dir and resume and ckpt.latest_step(checkpoint_dir) is not None:
+        params, extra, start_step = ckpt.restore(checkpoint_dir, params)
+        state = state._replace(step=jnp.asarray(start_step, jnp.int32),
+                               c0=jnp.asarray(extra.get("c0", 0.0)))
+        if log:
+            log(f"[mgd] resumed from step {start_step}")
+
+    step_fn = make_mgd_step(loss_fn, cfg)
+
+    def body(carry, _):
+        p, s = carry
+        batch = sample_fn(s.step // cfg.tau_x)
+        p, s, m = step_fn(p, s, batch)
+        return (p, s), m
+
+    def make_runner(n):
+        @jax.jit
+        def run(p, s):
+            (p, s), ms = jax.lax.scan(body, (p, s), None, length=n)
+            return p, s, jax.tree_util.tree_map(lambda x: x[-1], ms)
+        return run
+
+    runners = {}
+    history = []
+    done = start_step
+    t0 = time.time()
+    while done < num_steps:
+        n = min(chunk, num_steps - done)
+        if n not in runners:
+            runners[n] = make_runner(n)
+        params, state, metrics = runners[n](params, state)
+        done += n
+        rec = {k: float(v) for k, v in metrics.items()}
+        if eval_fn and eval_every and (done % eval_every < chunk):
+            rec.update({k: float(v) for k, v in eval_fn(params).items()})
+        history.append((done, rec))
+        if log:
+            msg = " ".join(f"{k}={v:.4g}" for k, v in rec.items())
+            log(f"[mgd] step {done}/{num_steps} {msg} "
+                f"({(time.time()-t0):.1f}s)")
+        if checkpoint_dir and checkpoint_every and done % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, done, params,
+                      extra={"c0": float(state.c0),
+                             "algo": "mgd", "seed": cfg.seed})
+    return TrainResult(params, state, history, done)
+
+
+def train_backprop(
+    loss_fn: Callable,
+    params,
+    sample_fn: Callable,
+    num_steps: int,
+    *,
+    eta: float,
+    momentum: float = 0.0,
+    chunk: int = 100,
+    eval_fn: Optional[Callable] = None,
+    eval_every: int = 0,
+    log: Optional[Callable] = print,
+) -> TrainResult:
+    """The paper's comparison baseline: backprop + plain SGD."""
+    opt_state = sgd_init(params, momentum)
+    grad_fn = jax.grad(loss_fn)
+
+    def body(carry, i):
+        p, o = carry
+        batch = sample_fn(i)
+        g = grad_fn(p, batch)
+        p, o = sgd_step(p, g, o, eta=eta, momentum=momentum)
+        return (p, o), loss_fn(p, batch)
+
+    @jax.jit
+    def run_chunk(p, o, i0):
+        (p, o), losses = jax.lax.scan(
+            body, (p, o), i0 + jnp.arange(chunk))
+        return p, o, losses[-1]
+
+    history = []
+    done = 0
+    while done < num_steps:
+        params, opt_state, loss = run_chunk(
+            params, opt_state, jnp.asarray(done, jnp.int32))
+        done += chunk
+        rec = {"cost": float(loss)}
+        if eval_fn and eval_every and (done % eval_every < chunk):
+            rec.update({k: float(v) for k, v in eval_fn(params).items()})
+        history.append((done, rec))
+        if log:
+            msg = " ".join(f"{k}={v:.4g}" for k, v in rec.items())
+            log(f"[bp ] step {done}/{num_steps} {msg}")
+    return TrainResult(params, opt_state, history, done)
+
+
+def classification_accuracy(apply_fn, params, x, y_onehot):
+    """Fraction of argmax matches — the paper's accuracy metric."""
+    pred = apply_fn(params, x)
+    return jnp.mean(
+        (jnp.argmax(pred, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32))

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only the dry-run
+(and subprocess-based distributed tests) use virtual device counts."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,172 @@
+"""MGD optimizer semantics: the paper's algorithm equivalences (Fig. 2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.core.forward_grad import (forward_gradient, gradient_angle,
+                                     true_gradient)
+from repro.core.utils import tree_size
+
+TARGET = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([[0.5, -0.5]])}
+P0 = {"w": jnp.zeros(3), "b": jnp.zeros((1, 2))}
+
+
+def quad_loss(p, batch):
+    return sum(jnp.sum((p[k] - TARGET[k]) ** 2) for k in p)
+
+
+def run(cfg, params, steps, batch=None):
+    state = mgd_init(params, cfg)
+    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    for _ in range(steps):
+        params, state, metrics = step(params, state, batch)
+    return params, state, metrics
+
+
+def test_finite_difference_equivalence():
+    """Sequential perturbations + τ_θ = P ≡ forward finite difference
+    (paper §2.2, Fig. 2a): after P steps G equals the FD gradient."""
+    n = tree_size(P0)
+    cfg = MGDConfig(ptype="sequential", dtheta=1e-3, eta=0.0,
+                    tau_theta=10**9)
+    _, state, _ = run(cfg, P0, n)
+    g_true = true_gradient(quad_loss, P0, None)
+    ang = gradient_angle(state.g, g_true)
+    assert float(ang) < 2e-3   # FD bias only
+    np.testing.assert_allclose(np.asarray(state.g["w"]),
+                               np.asarray(g_true["w"]), rtol=2e-2)
+
+
+def test_coordinate_descent_converges():
+    """Sequential + τ_θ = τ_p = coordinate descent (Fig. 2b)."""
+    cfg = MGDConfig(ptype="sequential", dtheta=1e-3, eta=0.3, tau_theta=1)
+    params, _, _ = run(cfg, P0, 400)
+    assert float(quad_loss(params, None)) < 1e-3
+
+
+def test_spsa_converges():
+    """Rademacher + τ_θ = τ_p = SPSA (Fig. 2c)."""
+    cfg = MGDConfig(ptype="rademacher", dtheta=1e-3, eta=0.05, tau_theta=1)
+    params, _, _ = run(cfg, P0, 800)
+    assert float(quad_loss(params, None)) < 1e-3
+
+
+@pytest.mark.parametrize("mode", ["forward", "central"])
+def test_replay_equals_accumulator(mode):
+    """Scalar-replay (O(1) memory) must reproduce the G-buffer trajectory."""
+    cfg_g = MGDConfig(dtheta=1e-3, eta=0.02, tau_theta=4, mode=mode)
+    cfg_r = dataclasses.replace(cfg_g, replay=True)
+    p_g, _, _ = run(cfg_g, P0, 200)
+    p_r, _, _ = run(cfg_r, P0, 200)
+    for k in p_g:
+        np.testing.assert_allclose(np.asarray(p_g[k]), np.asarray(p_r[k]),
+                                   atol=5e-5)
+
+
+def test_central_difference_lower_bias():
+    """Central probes have O(Δθ²) bias vs O(Δθ) forward — at large Δθ the
+    central G must align better with the true gradient."""
+    g_true = true_gradient(quad_loss, P0, None)
+    angles = {}
+    for mode in ["forward", "central"]:
+        cfg = MGDConfig(dtheta=0.5, eta=0.0, tau_theta=10**9, mode=mode)
+        _, state, _ = run(cfg, P0, 400)
+        angles[mode] = float(gradient_angle(state.g, g_true))
+    assert angles["central"] < angles["forward"]
+
+
+def test_probe_averaging_reduces_variance():
+    g_true = true_gradient(quad_loss, P0, None)
+    angles = {}
+    for k in [1, 8]:
+        cfg = MGDConfig(dtheta=1e-3, eta=0.0, tau_theta=10**9, probes=k)
+        _, state, _ = run(cfg, P0, 40)
+        angles[k] = float(gradient_angle(state.g, g_true))
+    assert angles[8] < angles[1]
+
+
+def test_gradient_angle_convergence():
+    """Paper Fig. 5: G → true gradient as integration time grows."""
+    g_true = true_gradient(quad_loss, P0, None)
+    cfg = MGDConfig(dtheta=1e-4, eta=0.0, tau_theta=10**9)
+    state = mgd_init(P0, cfg)
+    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    p = P0
+    angles = []
+    for t in range(2000):
+        p, state, _ = step(p, state, None)
+        if t in (2, 49, 1999):
+            angles.append(float(gradient_angle(state.g, g_true)))
+    # short integration is clearly worse; converged angle is small.  The
+    # curve saturates near its Δθ-bias floor, so only assert the large-
+    # scale monotonicity the paper's Fig. 5 shows.
+    assert angles[0] > angles[2]
+    assert angles[2] < 0.15
+
+
+def test_forward_gradient_oracle_is_dtheta_limit():
+    """jvp forward gradient == MGD single central probe as Δθ → 0."""
+    fg = forward_gradient(quad_loss, P0, None, step=5, seed=0)
+    cfg = MGDConfig(dtheta=1e-5, eta=0.0, tau_theta=10**9, mode="central")
+    state = mgd_init(P0, cfg)
+    state = state._replace(step=jnp.asarray(5, jnp.int32))
+    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    _, state, _ = step(P0, state, None)
+    for k in fg:
+        np.testing.assert_allclose(np.asarray(state.g[k]),
+                                   np.asarray(fg[k]), rtol=1e-2, atol=1e-3)
+
+
+def test_temporal_batching_equals_spatial():
+    """Paper Fig. 3: integrating G over τ_θ/τ_x sample changes ≡ summing
+    per-sample gradients (exact in FD mode on a linear-regression loss)."""
+    xs = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0], [2.0, -1.0]])
+    ys = jnp.array([2.0, -1.0, 1.0, 5.0])
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.sum((x @ p["w"] - y) ** 2)
+
+    params = {"w": jnp.zeros(2)}
+    n = 2
+    # batch-of-4 gradient via backprop
+    g_batch = true_gradient(
+        loss, params, (xs, ys))
+    # MGD: τ_x = P (FD per sample), τ_θ = 4·P → integrates all 4 samples
+    cfg = MGDConfig(ptype="sequential", dtheta=1e-4, eta=0.0,
+                    tau_theta=10**9)
+    state = mgd_init(params, cfg)
+    step = jax.jit(make_mgd_step(loss, cfg))
+    p = params
+    for i in range(4 * n):
+        batch = (xs[i // n][None], ys[i // n][None])
+        p, state, _ = step(p, state, batch)
+    np.testing.assert_allclose(np.asarray(state.g["w"]),
+                               np.asarray(g_batch["w"]), rtol=1e-2)
+
+
+def test_momentum_accelerates_quadratic():
+    """Heavy-ball ≈ 1/(1−β)× effective rate on a quadratic: at a small
+    base η, momentum 0.9 must be well ahead at a fixed step budget."""
+    cfg0 = MGDConfig(dtheta=1e-3, eta=0.002, tau_theta=1)
+    cfg1 = MGDConfig(dtheta=1e-3, eta=0.002, tau_theta=1, momentum=0.9)
+    p0, _, _ = run(cfg0, P0, 400)
+    p1, _, _ = run(cfg1, P0, 400)
+    assert float(quad_loss(p1, None)) < float(quad_loss(p0, None))
+
+
+def test_update_only_every_tau_theta():
+    cfg = MGDConfig(dtheta=1e-3, eta=0.1, tau_theta=5)
+    state = mgd_init(P0, cfg)
+    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    p = P0
+    for i in range(5):
+        p_prev = p
+        p, state, m = step(p, state, None)
+        changed = any(np.any(np.asarray(p[k]) != np.asarray(p_prev[k]))
+                      for k in p)
+        assert changed == (i == 4), f"step {i}: changed={changed}"

@@ -1,0 +1,119 @@
+"""Paper §3.5: robustness to cost noise, update noise, activation defects."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalogMGDConfig, MGDConfig, analog_init,
+                        make_analog_step, make_mgd_epoch, make_mgd_step,
+                        mgd_init, mse)
+from repro.core.noise import (defective_sigmoid, ideal_defects,
+                              sample_defects)
+from repro.data import tasks
+from repro.data.pipeline import dataset_sampler
+from repro.models.simple import mlp_apply, mlp_init
+
+
+def _xor_run(cfg, steps=30000, seeds=(1, 2, 3)):
+    """Median final cost over param seeds (XOR has stuck inits; the paper
+    reports medians over 100–1000 inits)."""
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    finals = []
+    for seed in seeds:
+        params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+        run = make_mgd_epoch(loss_fn, cfg, 2000, dataset_sampler(x, y, 1))
+        state = mgd_init(params, cfg)
+        for _ in range(steps // 2000):
+            params, state, _ = run(params, state)
+        finals.append(float(mse(mlp_apply(params, x), y)))
+    return sorted(finals)[len(finals) // 2]
+
+
+def test_cost_noise_below_threshold_still_trains():
+    """Fig. 8a: cost noise below the perturbation response (C̃ ≈ |g|·Δθ ≈
+    1e-3 here) barely changes training; σ_C = 1e-4 is sub-threshold."""
+    base = MGDConfig(dtheta=1e-2, eta=1.0, seed=4)
+    noisy = MGDConfig(dtheta=1e-2, eta=1.0, seed=4, cost_noise=1e-4)
+    assert _xor_run(base, seeds=(2, 3, 5)) < 0.04
+    assert _xor_run(noisy, seeds=(2, 3, 5)) < 0.04
+
+
+def test_large_cost_noise_breaks_training():
+    """Fig. 8a's other end: cost noise ≫ perturbation response stalls it."""
+    very_noisy = MGDConfig(dtheta=1e-2, eta=1.0, seed=4, cost_noise=1.0)
+    assert _xor_run(very_noisy, steps=20000) > 0.04
+
+
+def test_update_noise_tolerated():
+    """Fig. 9: moderate σ_θ update noise still converges."""
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=4, update_noise=0.01)
+    assert _xor_run(cfg, seeds=(2, 3, 5)) < 0.05
+
+
+def test_longer_tau_theta_suppresses_update_noise():
+    """Fig. 9b/d mechanism: G accumulates (not averages) over τ_θ, so at
+    fixed η the applied update ‖ηG‖ grows ∝ τ_θ while σ_θ·Δθ noise per
+    write is constant — the relative noise shrinks ∝ 1/τ_θ.  (The paper's
+    end-to-end XOR demonstration of this is plateau-dominated at small
+    scale; we assert the magnitude mechanism directly.)"""
+    import jax as _jax
+    from repro.core import make_mgd_step as _mk, mgd_init as _init
+    from repro.core.utils import tree_norm, tree_sub
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])  # noqa: E731
+    params = mlp_init(jax.random.PRNGKey(2), (2, 2, 1))
+
+    def update_norm(tau):
+        cfg = MGDConfig(dtheta=1e-2, eta=0.05, tau_theta=tau, seed=4)
+        step = _jax.jit(_mk(loss_fn, cfg))
+        st = _init(params, cfg)
+        p = params
+        norms = []
+        for i in range(tau * 3):
+            p_prev, (p, st, m) = p, step(p, st, batch)
+            if float(m["updated"]):
+                norms.append(float(tree_norm(tree_sub(p, p_prev))))
+        return sum(norms) / len(norms)
+
+    u1, u100 = update_norm(1), update_norm(100)
+    assert u100 > 10 * u1, (u1, u100)
+
+
+def test_activation_defects():
+    """Fig. 10: σ_a = 0 is exactly sigmoid; moderate defects still train."""
+    a = jnp.linspace(-3, 3, 64)
+    np.testing.assert_allclose(
+        np.asarray(defective_sigmoid(a, ideal_defects(1))),
+        np.asarray(jax.nn.sigmoid(a)), rtol=1e-6)
+
+    defects = [sample_defects(0, 2, 0.15), sample_defects(1, 1, 0.15)]
+    x, y = tasks.xor_dataset()
+    params = mlp_init(jax.random.PRNGKey(1), (2, 2, 1))
+    loss_fn = lambda p, b: mse(                                # noqa: E731
+        mlp_apply(p, b["x"], defects=defects), b["y"])
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=4)
+    run = make_mgd_epoch(loss_fn, cfg, 2000, dataset_sampler(x, y, 1))
+    state = mgd_init(params, cfg)
+    for _ in range(20):
+        params, state, _ = run(params, state)
+    final = float(mse(mlp_apply(params, x, defects=defects), y))
+    assert final < 0.06, final
+
+
+def test_analog_algorithm_trains_quadratic():
+    """Algorithm 2 (continuous): converges inside its stability regime."""
+    target = {"w": jnp.array([1.0, -2.0, 3.0])}
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - target["w"]) ** 2)
+
+    params = {"w": jnp.zeros(3)}
+    cfg = AnalogMGDConfig(dtheta=1e-2, eta=1e-3, tau_theta=10.0,
+                          tau_hp=100.0)
+    state = analog_init(params, cfg)
+    step = jax.jit(make_analog_step(loss, cfg))
+    for _ in range(20000):
+        params, state, m = step(params, state, None)
+    assert float(loss(params, None)) < 0.5

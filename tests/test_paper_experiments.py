@@ -1,0 +1,89 @@
+"""End-to-end reproductions of the paper's own training experiments
+(Table 2 rows at reduced step budgets; full budgets in benchmarks/)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.data import tasks
+from repro.data.pipeline import dataset_sampler, generator_sampler
+from repro.models.simple import mlp_apply, mlp_init
+from repro.training.train_loop import train_backprop
+
+
+def _train_scan(loss_fn, params, cfg, sample_fn, steps, chunk=2000):
+    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn)
+    state = mgd_init(params, cfg)
+    for _ in range(steps // chunk):
+        params, state, metrics = run(params, state)
+    return params, state
+
+
+def test_xor_trains_to_solution():
+    """Paper Fig. 4 / Table 2 row 1: 2-2-1 net solves 2-bit parity with
+    MGD (τ_θ = τ_p = τ_x = 1).  Calibration note (EXPERIMENTS.md §Paper):
+    the paper's η = 5 saturates our N(0,1/√fan_in)-initialized sigmoids;
+    η = 1 solves 8/8 seeds within 15k steps — the claims reproduced are
+    the algorithmic ones, not the η value."""
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = dataset_sampler(x, y, 1)
+    finals = []
+    for seed in (1, 2, 3):
+        params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+        cfg = MGDConfig(dtheta=1e-2, eta=1.0, tau_theta=1, tau_x=1,
+                        seed=seed)
+        params, _ = _train_scan(loss_fn, params, cfg, sample_fn, 20000)
+        finals.append(float(mse(mlp_apply(params, x), y)))
+    assert sorted(finals)[1] < 0.04, finals   # median seed solves
+
+
+def test_xor_mgd_tracks_backprop():
+    """Paper Fig. 4a: long integration (τ_θ = τ_x large) follows the
+    backprop trajectory; here both must reach the solution."""
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = dataset_sampler(x, y, 4)
+    p0 = mlp_init(jax.random.PRNGKey(5), (2, 2, 1))
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, tau_theta=1, tau_x=1, seed=0)
+    p_mgd, _ = _train_scan(loss_fn, p0, cfg, sample_fn, 20000)
+    res = train_backprop(loss_fn, p0, sample_fn, 2000, eta=2.0, log=None)
+    assert float(mse(mlp_apply(p_mgd, x), y)) < 0.04
+    assert float(mse(mlp_apply(res.params, x), y)) < 0.04
+
+
+def test_nist7x7_accuracy():
+    """Paper Table 2: 49-4-4 on NIST7x7 batch-1 MGD reaches 81% at 1e5
+    steps.  At the SPSA-stable η = 0.1 (η_max ≈ 2/(λP), P = 220) we
+    measure ~84% at 9e4 steps; require > 70%."""
+    params = mlp_init(jax.random.PRNGKey(2), (49, 4, 4))
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = generator_sampler(tasks.nist7x7_batch, 1, seed=11)
+    cfg = MGDConfig(dtheta=1e-2, eta=0.1, tau_theta=1, tau_x=1, seed=1)
+    params, _ = _train_scan(loss_fn, params, cfg, sample_fn, 90000,
+                            chunk=15000)
+    xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
+    acc = float(jnp.mean((jnp.argmax(mlp_apply(params, xe), -1)
+                          == jnp.argmax(ye, -1)).astype(jnp.float32)))
+    assert acc > 0.70, acc
+
+
+def test_batching_via_tau_x():
+    """Paper Fig. 3: τ_θ/τ_x controls effective batch.  τ_θ = 4·τ_x with
+    the 4 XOR samples cycled ≡ full-batch gradient descent — it must
+    solve the task."""
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = dataset_sampler(x, y, 1)     # one sample at a time
+    finals = []
+    for seed in (1, 2, 3):
+        params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+        # G accumulates over τ_θ = 4, so η·τ_θ ≈ 1 matches the τ_θ = 1 runs
+        cfg = MGDConfig(dtheta=1e-2, eta=0.25, tau_theta=4, tau_x=1,
+                        seed=seed)
+        params, _ = _train_scan(loss_fn, params, cfg, sample_fn, 40000)
+        finals.append(float(mse(mlp_apply(params, x), y)))
+    assert sorted(finals)[1] < 0.04, finals

@@ -1,0 +1,87 @@
+"""Perturbation family invariants (paper §2.1, §3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import perturbations as pert
+
+
+@pytest.mark.parametrize("ptype", pert.PERTURBATION_TYPES)
+def test_zero_mean(ptype):
+    """Time-average of the ± perturbation families ≈ 0.  Sequential
+    (one-at-a-time +Δθ, the FD setting) is NOT mean-zero by construction —
+    its mean is Δθ/P; the paper handles it via the C₀ baseline
+    subtraction, so we assert that exact offset instead."""
+    n_params, n_steps = 8, 512
+    dummy = {"w": jax.ShapeDtypeStruct((n_params,), jnp.float32)}
+    seq = jnp.stack([
+        pert.generate(dummy, ptype=ptype, step=t, seed=3, dtheta=1.0)["w"]
+        for t in range(n_steps)])
+    mean = jnp.mean(seq, axis=0)
+    if ptype == "sequential":
+        np.testing.assert_allclose(np.asarray(mean), 1.0 / n_params,
+                                   atol=1e-6)
+    else:
+        tol = 0.01 if ptype == "walsh" else 0.15
+        assert float(jnp.max(jnp.abs(mean))) < tol
+
+
+@pytest.mark.parametrize("ptype,tol_off", [
+    ("walsh", 1e-6),          # deterministically orthogonal
+    ("sequential", 1e-6),     # trivially orthogonal (disjoint support)
+    ("rademacher", 0.2),      # statistically orthogonal, O(1/sqrt(T))
+    ("sinusoidal", 0.2),      # orthogonal as T → ∞
+])
+def test_pairwise_orthogonality(ptype, tol_off):
+    """Gram matrix of perturbation sequences ≈ diagonal (paper Eq. 2)."""
+    n_params, n_steps = 8, 1024
+    gram = np.asarray(pert.orthogonality_check(
+        ptype, n_params, n_steps, dtheta=1.0))
+    off = gram - np.diag(np.diag(gram))
+    diag = np.diag(gram)
+    assert np.max(np.abs(off)) < tol_off, gram.round(3)
+    # diagonal power: Δθ² (±codes), Δθ²/2 (sin), Δθ²/P (sequential)
+    if ptype in ("walsh", "rademacher"):
+        np.testing.assert_allclose(diag, 1.0, atol=1e-5)
+    elif ptype == "sinusoidal":
+        np.testing.assert_allclose(diag, 0.5, atol=0.2)
+
+
+def test_determinism_across_calls():
+    dummy = {"a": jax.ShapeDtypeStruct((16,), jnp.float32),
+             "b": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    p1 = pert.generate(dummy, ptype="rademacher", step=7, seed=5, dtheta=0.1)
+    p2 = pert.generate(dummy, ptype="rademacher", step=7, seed=5, dtheta=0.1)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_tau_p_holds_perturbation():
+    """Perturbation pattern advances only every τ_p steps (paper Table 1)."""
+    dummy = {"w": jax.ShapeDtypeStruct((32,), jnp.float32)}
+    p0 = pert.generate(dummy, ptype="rademacher", step=6, seed=0,
+                       dtheta=1.0, tau_p=3)
+    p1 = pert.generate(dummy, ptype="rademacher", step=7, seed=0,
+                       dtheta=1.0, tau_p=3)
+    p2 = pert.generate(dummy, ptype="rademacher", step=9, seed=0,
+                       dtheta=1.0, tau_p=3)
+    np.testing.assert_array_equal(np.asarray(p0["w"]), np.asarray(p1["w"]))
+    assert np.any(np.asarray(p0["w"]) != np.asarray(p2["w"]))
+
+
+def test_distinct_leaves_distinct_signs():
+    dummy = {"a": jax.ShapeDtypeStruct((64,), jnp.float32),
+             "b": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    p = pert.generate(dummy, ptype="rademacher", step=0, seed=0, dtheta=1.0)
+    assert np.any(np.asarray(p["a"]) != np.asarray(p["b"]))
+
+
+def test_signs_match_generate():
+    """generate_signs_only · Δθ == generate (the replay-mode invariant)."""
+    dummy = {"w": jax.ShapeDtypeStruct((100,), jnp.float32)}
+    full = pert.generate(dummy, ptype="rademacher", step=3, seed=9,
+                         dtheta=0.25)
+    signs = pert.generate_signs_only(dummy, step=3, seed=9)
+    np.testing.assert_allclose(np.asarray(full["w"]),
+                               0.25 * np.asarray(signs["w"]), rtol=1e-6)

@@ -1,0 +1,131 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.core import perturbations as pert
+from repro.core.forward_grad import true_gradient
+from repro.core.utils import (tree_axpy, tree_dot, tree_norm, tree_scale,
+                              tree_size)
+from repro.distributed.compression import quantize_int8, dequantize_int8
+from repro.distributed.sharding import logical_spec
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@SETTINGS
+@given(n=st.integers(2, 64), seed=st.integers(0, 2**31 - 1),
+       step=st.integers(0, 10**6))
+def test_rademacher_signs_are_pm_one(n, seed, step):
+    dummy = {"w": jax.ShapeDtypeStruct((n,), jnp.float32)}
+    p = pert.generate(dummy, ptype="rademacher", step=step, seed=seed,
+                      dtheta=1.0)["w"]
+    assert set(np.unique(np.asarray(p))) <= {-1.0, 1.0}
+
+
+@SETTINGS
+@given(n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_sequential_perturbs_exactly_one(n, seed):
+    dummy = {"w": jax.ShapeDtypeStruct((n,), jnp.float32)}
+    for step in (0, 1, n - 1, n, 2 * n + 1):
+        p = np.asarray(pert.generate(dummy, ptype="sequential", step=step,
+                                     seed=seed, dtheta=0.5)["w"])
+        assert (p != 0).sum() == 1
+        assert p.sum() == np.float32(0.5)
+
+
+@SETTINGS
+@given(w=st.lists(st.floats(-3, 3, allow_nan=False), min_size=2,
+                  max_size=8))
+def test_fd_mode_recovers_linear_gradient_exactly(w):
+    """For a LINEAR cost, the FD estimate has zero truncation error: after
+    P sequential steps, G == ∇C for any weights (homodyne correctness)."""
+    wv = jnp.asarray(w, jnp.float32)
+
+    def loss(p, batch):
+        return jnp.sum(p["w"] * wv)
+
+    params = {"w": jnp.zeros(len(w))}
+    cfg = MGDConfig(ptype="sequential", dtheta=0.25, eta=0.0,
+                    tau_theta=10**9)
+    state = mgd_init(params, cfg)
+    step = jax.jit(make_mgd_step(loss, cfg))
+    p = params
+    for _ in range(len(w)):
+        p, state, _ = step(p, state, None)
+    np.testing.assert_allclose(np.asarray(state.g["w"]), np.asarray(wv),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 1000))
+def test_rademacher_estimator_unbiased_linear(seed):
+    """E[C̃·θ̃/Δθ²] = ∇C for linear costs: the mean over many probes of the
+    single-step G converges to the gradient."""
+    g_true = jnp.asarray([1.5, -2.0, 0.5, 3.0])
+
+    def loss(p, batch):
+        return jnp.sum(p["w"] * g_true)
+
+    params = {"w": jnp.zeros(4)}
+    cfg = MGDConfig(dtheta=0.1, eta=0.0, tau_theta=10**9, seed=seed,
+                    probes=64, mode="central")
+    state = mgd_init(params, cfg)
+    step = jax.jit(make_mgd_step(loss, cfg))
+    _, state, _ = step(params, state, None)
+    err = float(jnp.max(jnp.abs(state.g["w"] - g_true)))
+    # 64 probes → s.e. ≈ |g|·√(P−1)/√64 ≈ 0.8; generous bound
+    assert err < 3.0
+
+
+@SETTINGS
+@given(data=st.lists(st.floats(-100, 100, allow_nan=False,
+                               allow_infinity=False, width=32),
+                     min_size=1, max_size=64),
+       seed=st.integers(0, 2**31 - 1))
+def test_int8_quantization_bounded_error(data, seed):
+    g = jnp.asarray(data, jnp.float32)
+    residual = jnp.zeros_like(g)
+    q, scale, new_res = quantize_int8(g, residual, jax.random.PRNGKey(seed))
+    deq = dequantize_int8(q, scale)
+    # error per element ≤ 1 quantum (stochastic rounding)
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(scale) + 1e-6
+    # error feedback exactly carries the residual
+    np.testing.assert_allclose(np.asarray(g - deq), np.asarray(new_res),
+                               rtol=1e-5, atol=1e-5)
+
+
+@SETTINGS
+@given(dims=st.lists(st.integers(1, 512), min_size=1, max_size=4))
+def test_logical_spec_always_divides(dims):
+    class M:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    names = ["batch", "kvseq", "model", None][:len(dims)]
+    spec = logical_spec(tuple(dims), names, M())
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= M.shape[a]
+        assert dim % total == 0
+
+
+@SETTINGS
+@given(x=st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                  min_size=1, max_size=32),
+       a=st.floats(-5, 5, allow_nan=False, width=32))
+def test_tree_axpy_linearity(x, a):
+    t = {"w": jnp.asarray(x, jnp.float32)}
+    z = {"w": jnp.zeros(len(x))}
+    out = tree_axpy(a, t, z)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               a * np.asarray(t["w"]), rtol=1e-5,
+                               atol=1e-5)
+    # dot/norm consistency
+    assert abs(float(tree_dot(t, t)) - float(tree_norm(t)) ** 2) < 1e-2
