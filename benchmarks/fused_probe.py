@@ -1,0 +1,134 @@
+"""Fused probe execution path: steps/sec + modeled HBM weight traffic,
+materialized vs fused, on the MLP and transformer configs.
+
+The fused path's claim is a *memory-roofline* one: an MGD probe should cost
+the same weight HBM reads as inference.  The materializing baseline pays,
+per probe sign, a read of W to build θ+θ̃ plus a read of the materialized
+θ+θ̃ inside the matmul (≈2× inference W-bytes; central mode doubles it to
+≈4× per antithetic pair).  The fused kernels regenerate the signs in VMEM —
+one read of W per probe (forward) and, with the pair kernel, one read per
+probe *pair* (central).  Wall-clock steps/sec on a CPU interpret backend is
+reported for completeness but measures the Pallas interpreter, not the TPU
+kernel; the bytes model is the hardware-relevant number and feeds the
+roofline report (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.core.utils import tree_size
+from repro.models.simple import make_mlp_probe_fn, mlp_apply, mlp_init
+
+STEPS = 60          # measured steps per path (after one warm-up chunk)
+CHUNK = 20
+
+
+def _weight_bytes(params):
+    """(matmul-weight bytes, other bytes) — ndim≥2 leaves ride the kernels."""
+    wb = ob = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.size * leaf.dtype.itemsize
+        if leaf.ndim >= 2:
+            wb += n
+        else:
+            ob += n
+    return wb, ob
+
+
+def _modeled_reads(mode: str, fused: bool) -> float:
+    """Weight HBM reads per probe step, in units of one inference pass.
+
+    materialized probe: read W (θ+θ̃ build) + read θ+θ̃ (matmul) = 2×;
+    fused probe: 1×; fused central pair shares the read → 1× per pair.
+    """
+    per_sign = 1.0 if fused else 2.0
+    signs = 2 if mode == "central" else 1
+    if fused and mode == "central":
+        return 1.0                     # pair kernel: one pass over W
+    return per_sign * signs
+
+
+def _timed_run(run, params, state, steps):
+    params, state, _ = run(params, state)          # warm-up + compile
+    t0 = time.perf_counter()
+    done = 0
+    while done < steps:
+        params, state, _ = run(params, state)
+        done += CHUNK
+    jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
+    return done / (time.perf_counter() - t0)
+
+
+def _bench_mlp(mode, fused):
+    sizes = (64, 64, 10)
+    key = jax.random.PRNGKey(0)
+    params = mlp_init(key, sizes)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (32, sizes[0]))
+    y = jax.nn.one_hot(
+        jax.random.randint(jax.random.fold_in(key, 2), (32,), 0, sizes[-1]),
+        sizes[-1])
+    batch = {"x": x, "y": y}
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])  # noqa: E731
+    cfg = MGDConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
+                    kernel_impl=None if jax.default_backend() == "tpu"
+                    else "interpret")
+    run = make_mgd_epoch(loss_fn, cfg, CHUNK, lambda i: batch,
+                         probe_fn=make_mlp_probe_fn() if fused else None)
+    sps = _timed_run(run, params, mgd_init(params, cfg), STEPS)
+    return params, sps
+
+
+def _bench_transformer(mode, fused):
+    from repro.configs import get_smoke_config
+    from repro.models import make_transformer_probe_fn, model_init, model_loss
+    cfg_a = get_smoke_config("qwen3-14b").replace(dtype="float32")
+    params = model_init(cfg_a, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_a.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    loss_fn = lambda p, b: model_loss(p, cfg_a, b)  # noqa: E731
+    cfg = MGDConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
+                    kernel_impl=None if jax.default_backend() == "tpu"
+                    else "interpret")
+    run = make_mgd_epoch(loss_fn, cfg, CHUNK, lambda i: batch,
+                         probe_fn=(make_transformer_probe_fn(cfg_a)
+                                   if fused else None))
+    sps = _timed_run(run, params, mgd_init(params, cfg), STEPS)
+    return params, sps
+
+
+def run():
+    rows = []
+    for model_name, bench in (("mlp", _bench_mlp),
+                              ("transformer", _bench_transformer)):
+        for mode in ("forward", "central"):
+            sps = {}
+            params = None
+            for fused in (False, True):
+                params, sps[fused] = bench(mode, fused)
+            wb, ob = _weight_bytes(params)
+            for fused in (False, True):
+                reads = _modeled_reads(mode, fused)
+                rows.append({
+                    "bench": "fused_probe",
+                    "name": f"{model_name}_{mode}_"
+                            f"{'fused' if fused else 'materialized'}",
+                    "value": round(sps[fused], 3),
+                    "detail": (f"steps/s ({jax.default_backend()}); modeled "
+                               f"W-reads/probe-step {reads:.0f}x inference "
+                               f"({reads * wb / 1e6:.2f} MB of "
+                               f"{wb / 1e6:.2f} MB weights; "
+                               f"{tree_size(params)} params)"),
+                })
+            rows.append({
+                "bench": "fused_probe",
+                "name": f"{model_name}_{mode}_wread_ratio",
+                "value": _modeled_reads(mode, False) / _modeled_reads(
+                    mode, True),
+                "detail": "materialized/fused modeled W-read ratio "
+                          "(central pair target: 4x -> 1x)",
+            })
+    return rows

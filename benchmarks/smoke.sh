@@ -1,0 +1,11 @@
+#!/usr/bin/env sh
+# CI-style smoke: kernel correctness + fused-probe path + one bench config,
+# all on the CPU/interpret backend.  Run from the repo root:
+#   sh benchmarks/smoke.sh
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py
+python -m benchmarks.run --only fused_probe --out artifacts/bench
+echo "smoke OK"

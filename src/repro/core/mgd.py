@@ -42,6 +42,7 @@ import numpy as np
 
 from . import perturbations as pert
 from .utils import (
+    leaf_meta,
     tree_add,
     tree_axpy,
     tree_scale,
@@ -84,6 +85,15 @@ class MGDConfig:
     # bounded-staleness feedback: the update at step n may consume C̃ from
     # step n-d (straggler tolerance; 0 = synchronous paper behaviour)
     staleness: int = 0
+    # fused probe execution: probes evaluate through a model-provided
+    # probe_fn that routes weight matmuls through the Pallas
+    # perturbed-matmul kernels (θ̃ generated in VMEM, never in HBM), and
+    # the update regenerates θ̃ inside kernels.mgd_update_window for every
+    # ndim≥2 leaf.  Bit-identical (f32) cost/parameter trajectories to the
+    # materializing path; ~¼ the weight HBM reads per central probe pair
+    # (EXPERIMENTS.md §Perf).
+    fused: bool = False
+    kernel_impl: Optional[str] = None   # pallas | interpret | ref | None=auto
 
     def __post_init__(self):
         if self.ptype not in pert.PERTURBATION_TYPES:
@@ -98,6 +108,21 @@ class MGDConfig:
         if self.staleness and not self.replay:
             raise ValueError("bounded-staleness feedback requires replay mode "
                              "(the C̃ window is what absorbs the delay)")
+        if self.fused:
+            if self.ptype != "rademacher":
+                raise ValueError("fused path regenerates signs in-kernel — "
+                                 "rademacher only")
+            if self.probes != 1:
+                raise ValueError("fused path supports probes=1 (probe "
+                                 "parallelism composes at the mesh level)")
+            if self.momentum or self.update_noise:
+                raise ValueError("fused path has no materialized update "
+                                 "direction — momentum/update_noise need "
+                                 "the unfused optimizer")
+            if self.tau_theta > 1 and not self.replay:
+                raise ValueError("fused path with tau_theta > 1 requires "
+                                 "replay=True (the O(P) gradient accumulator "
+                                 "is exactly what fusion eliminates)")
 
 
 class MGDState(NamedTuple):
@@ -172,16 +197,30 @@ def make_mgd_step(
     loss_fn: Callable[[Pytree, Any], jnp.ndarray],
     cfg: MGDConfig,
     total_params: Optional[int] = None,
+    *,
+    probe_fn: Optional[Callable] = None,
 ):
     """Build the jittable MGD iteration.
 
     ``loss_fn(params, batch) -> scalar cost`` is the ONLY model interface —
     MGD never sees the network topology (model-free, paper §1).
 
+    With ``cfg.fused=True`` the model additionally provides
+    ``probe_fn(params, batch, probe: perturbations.Probe) -> [n_signs]``
+    costs under θ ± θ̃ — the perturbed-apply interface (e.g.
+    ``models.simple.make_mlp_probe_fn`` or
+    ``models.make_transformer_probe_fn``) that routes weight matmuls
+    through the Pallas kernels so θ̃ never exists in HBM.  The fused path
+    produces bit-identical (f32) C̃/parameter trajectories to the
+    materializing path.
+
     Returns ``step_fn(params, state, batch) -> (params, state, metrics)``.
     The caller controls τ_x by switching ``batch`` every τ_x calls (the data
     pipeline does this); everything else is internal.
     """
+    if cfg.fused and probe_fn is None:
+        raise ValueError("cfg.fused=True needs a probe_fn (the model's "
+                         "perturbed-apply interface)")
 
     def perturbation(params, step, probe=0):
         return pert.generate(
@@ -196,6 +235,15 @@ def make_mgd_step(
 
     inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
 
+    # Rounding pin for the scalar homodyne coefficients (C̃/Δθ² and the
+    # replay a_j).  XLA's simplifier is free to re-merge constant factors
+    # (Δθ, 1/Δθ², η) across these products — legal per-program, but it
+    # rounds differently in different programs, which would break the
+    # fused-vs-materialized bit-equality contract.  Pinning the coefficient
+    # value at its definition keeps every program on the written
+    # association.
+    _pin = jax.lax.optimization_barrier
+
     def probe_once(params, state, batch, probe):
         """One perturbation probe → (C̃, θ̃, c0, cost_metric)."""
         n = state.step
@@ -205,7 +253,10 @@ def make_mgd_step(
                             cfg, n, 2 * probe)
             c_minus = _noisy(loss_fn(tree_axpy(-1.0, theta_t, params), batch),
                              cfg, n, 2 * probe + 1)
-            c_tilde = 0.5 * (c_plus - c_minus)
+            # barrier: pin C̃'s own rounding before the ·1/Δθ² scaling —
+            # XLA otherwise folds 0.5·inv_d2 into one constant in SOME
+            # programs, breaking fused-vs-materialized bit-equality.
+            c_tilde = jax.lax.optimization_barrier(0.5 * (c_plus - c_minus))
             return c_tilde, theta_t, state.c0, 0.5 * (c_plus + c_minus)
         # forward mode (paper Algorithm 1): refresh C₀ when the sample
         # changed (n % τ_x == 0) or params were updated (n % τ_θ == 0).
@@ -223,12 +274,12 @@ def make_mgd_step(
         """All probes → averaged error signal contribution + scalars."""
         if cfg.probes == 1:
             c_tilde, theta_t, c0, cm = probe_once(params, state, batch, 0)
-            e = tree_scale(theta_t, c_tilde * inv_d2)
+            e = tree_scale(theta_t, _pin(c_tilde * inv_d2))
             return e, c_tilde, c0, cm
 
         def one(probe):
             c_tilde, theta_t, c0, cm = probe_once(params, state, batch, probe)
-            e = tree_scale(theta_t, c_tilde * inv_d2)
+            e = tree_scale(theta_t, _pin(c_tilde * inv_d2))
             return e, c_tilde, c0, cm
 
         ids = jnp.arange(cfg.probes)
@@ -263,6 +314,126 @@ def make_mgd_step(
             new_params = jax.tree_util.tree_map(leaf_noise, new_params)
         return new_params, m
 
+    # ----- fused probe + update paths (cfg.fused) --------------------------
+    #
+    # The probe evaluates through probe_fn (kernels regenerate θ̃ in VMEM);
+    # the update regenerates θ̃ inside kernels.mgd_update_window for every
+    # ndim≥2 leaf (read-W + write-W HBM traffic, window-length independent)
+    # and materializes only the O(d) leaves.  Every float op mirrors the
+    # materializing path's association exactly — see mgd_update_window.
+
+    def _probe(n, signs):
+        ctx = pert.ProbeCtx(signs=signs, dtheta=cfg.dtheta, tau_p=cfg.tau_p,
+                            impl=cfg.kernel_impl)
+        return pert.Probe(n, _probe_seed(cfg, 0), ctx)
+
+    def probe_once_fused(params, state, batch):
+        """Fused probe → (C̃, c0, cost_metric); no θ̃ pytree exists."""
+        n = state.step
+        if cfg.mode == "central":
+            costs = probe_fn(params, batch, _probe(n, (1.0, -1.0)))
+            c_plus = _noisy(costs[0], cfg, n, 0)
+            c_minus = _noisy(costs[1], cfg, n, 1)
+            # same rounding barrier as the materialized probe_once
+            c_tilde = jax.lax.optimization_barrier(0.5 * (c_plus - c_minus))
+            return c_tilde, state.c0, 0.5 * (c_plus + c_minus)
+        need_c0 = jnp.logical_or(n % cfg.tau_x == 0, n % cfg.tau_theta == 0)
+        c0 = jax.lax.cond(
+            need_c0,
+            lambda: _noisy(loss_fn(params, batch), cfg, n, 0).astype(jnp.float32),
+            lambda: state.c0,
+        )
+        c_pert = _noisy(probe_fn(params, batch, _probe(n, (1.0,)))[0],
+                        cfg, n, 1)
+        return c_pert - c0, c0, c0
+
+    def _fused_leaf_updates(params, lseeds_of, coefs, alpha, small_update):
+        """Shared leaf walk: ndim≥2 leaves through mgd_update_window,
+        small leaves through ``small_update(leaf, lid)``."""
+        from repro.kernels import ops as kops
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = []
+        for (lid, _, _), leaf in zip(leaf_meta(params), leaves):
+            if leaf.ndim >= 2:
+                out.append(kops.mgd_update_window(
+                    leaf, lseeds_of(lid), coefs, alpha=alpha,
+                    dtheta=cfg.dtheta, impl=cfg.kernel_impl))
+            else:
+                out.append(small_update(leaf, lid))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def fused_update_tau1(params, n, c_tilde):
+        """θ ← θ − η·C̃·θ̃/Δθ² with θ̃ regenerated in-kernel (τ_θ = 1)."""
+        seed = _probe_seed(cfg, 0)
+        s = _pin(c_tilde * inv_d2)     # mirrors tree_scale's f32 scalar
+
+        def small(leaf, lid):
+            theta = pert.rademacher_leaf(
+                leaf.shape, leaf.dtype, lid, step=n, seed=seed,
+                dtheta=cfg.dtheta, tau_p=cfg.tau_p)
+            e = (theta.astype(jnp.float32) * s).astype(theta.dtype)
+            return (leaf.astype(jnp.float32)
+                    + (-cfg.eta) * e.astype(jnp.float32)).astype(leaf.dtype)
+
+        def lseeds_of(lid):
+            return pert.leaf_seed(seed, n // jnp.int32(cfg.tau_p), lid)[None]
+
+        return _fused_leaf_updates(params, lseeds_of, s[None], -cfg.eta,
+                                   small)
+
+    def fused_replay_update(params, state, replay_c):
+        """Scalar-replay window update through the fused kernel: the J sign
+        regenerations happen against the already-resident W tile, so HBM
+        traffic is read-W + write-W regardless of τ_θ."""
+        n = state.step
+        seed = _probe_seed(cfg, 0)
+        window = replay_c.shape[0]
+        j = jnp.arange(cfg.tau_theta, dtype=jnp.int32)
+        steps = n - (cfg.tau_theta - 1) - cfg.staleness + j       # [J]
+        coefs = _pin(jnp.float32(-cfg.eta * inv_d2)
+                     * replay_c[steps % window])
+
+        def small(leaf, lid):
+            def body(jj, lf):
+                theta = pert.rademacher_leaf(
+                    lf.shape, lf.dtype, lid, step=steps[jj], seed=seed,
+                    dtheta=cfg.dtheta, tau_p=cfg.tau_p)
+                return (lf.astype(jnp.float32)
+                        + coefs[jj] * theta.astype(jnp.float32)
+                        ).astype(lf.dtype)
+            return jax.lax.fori_loop(0, cfg.tau_theta, body, leaf)
+
+        def lseeds_of(lid):
+            return pert.leaf_seed(seed, steps // jnp.int32(cfg.tau_p), lid)
+
+        return _fused_leaf_updates(params, lseeds_of, coefs, 1.0, small)
+
+    def step_fn_fused(params, state: MGDState, batch):
+        n = state.step
+        c_tilde, c0, cost_metric = probe_once_fused(params, state, batch)
+        do_update = (n + 1) % cfg.tau_theta == 0
+        metrics = {"cost": cost_metric, "c_tilde": c_tilde,
+                   "updated": do_update.astype(jnp.float32)}
+        if cfg.replay:
+            window = state.replay_c.shape[0]
+            replay_c = state.replay_c.at[n % window].set(c_tilde)
+            new_params = jax.lax.cond(
+                do_update,
+                lambda: fused_replay_update(params, state, replay_c),
+                lambda: params,
+            )
+            new_state = state._replace(
+                step=n + 1, c0=c0, replay_c=replay_c, metric_cost=cost_metric
+            )
+            return new_params, new_state, metrics
+        # tau_theta == 1 (enforced in __post_init__): update every step
+        new_params = fused_update_tau1(params, n, c_tilde)
+        new_state = MGDState(
+            step=n + 1, c0=c0, g=None, replay_c=None, m=None,
+            metric_cost=cost_metric,
+        )
+        return new_params, new_state, metrics
+
     # ----- replay-mode update: regenerate θ̃ for the τ_θ window ------------
     def replay_update(params, state, replay_c):
         """θ −= η Σ_j C̃_j · θ̃_j / Δθ²  over the last τ_θ steps, with the
@@ -278,9 +449,12 @@ def make_mgd_step(
             s = n - (cfg.tau_theta - 1) - cfg.staleness + j
             theta_j = perturbation(params, s)
             coef = replay_c[s % window]
-            return tree_axpy(-cfg.eta * inv_d2 * coef, theta_j, p)
+            return tree_axpy(_pin(-cfg.eta * inv_d2 * coef), theta_j, p)
 
         return jax.lax.fori_loop(0, cfg.tau_theta, body, params)
+
+    if cfg.fused:
+        return step_fn_fused
 
     def step_fn(params, state: MGDState, batch):
         n = state.step
@@ -335,6 +509,8 @@ def make_mgd_step(
 def make_mgd_epoch(
     loss_fn, cfg: MGDConfig, steps_per_call: int,
     sample_fn: Callable[[jnp.ndarray], Any],
+    *,
+    probe_fn: Optional[Callable] = None,
 ):
     """Scan ``steps_per_call`` MGD iterations inside one jitted call.
 
@@ -342,7 +518,7 @@ def make_mgd_epoch(
     sample index n // τ_x.  Used by the training loop and benchmarks to
     amortize dispatch overhead (one device program per chunk of steps).
     """
-    step_fn = make_mgd_step(loss_fn, cfg)
+    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn)
 
     def body(carry, _):
         params, state = carry

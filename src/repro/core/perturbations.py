@@ -24,8 +24,11 @@ The Rademacher hash is bit-for-bit reproduced by the Pallas kernels in
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import typing
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +151,95 @@ def generate_signs_only(params_like, *, step, seed, tau_p=1):
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(params_like), out
     )
+
+
+def rademacher_leaf(shape, dtype, lid, *, step, seed, dtheta, tau_p=1,
+                    offset=0):
+    """θ̃ for ONE leaf (or a contiguous row-major slice of a stacked leaf)
+    addressed by its *global* leaf id — bit-for-bit what ``generate`` emits
+    for that leaf under ptype="rademacher".
+
+    ``offset`` is the element offset of the slice within the leaf (e.g.
+    layer l of a stacked [L, d_in, d_out] bank → offset = l·d_in·d_out);
+    it may be a traced uint32 (scan carry).
+    """
+    n = 1
+    for s in shape:
+        n *= s
+    pert_step = jnp.asarray(step, jnp.int32) // jnp.int32(tau_p)
+    idx = jax.lax.iota(jnp.uint32, n) + jnp.asarray(offset, jnp.uint32)
+    sgn = rademacher_signs(leaf_seed(seed, pert_step, lid), idx)
+    return (sgn * dtheta).reshape(shape).astype(dtype)
+
+
+def shifted_leaf_seed(lseed, offset_elems):
+    """Leaf seed for a kernel that sign-indexes a row-major *slice* of a
+    leaf: fmix32((i+Δ)·G + s) == fmix32(i·G + (s + Δ·G)), so shifting the
+    seed by Δ·G makes the kernel's local indices reproduce the slice's
+    global sign pattern.  ``offset_elems`` is the slice's element offset
+    within the flattened leaf (traced ok; uint32 wraparound matches the
+    host generator's uint32 iota)."""
+    return (jnp.asarray(lseed, jnp.uint32)
+            + jnp.asarray(offset_elems, jnp.uint32) * _GOLDEN)
+
+
+def apply_signed(leaf, theta, sign):
+    """leaf + sign·θ̃ with the exact float order of the optimizer's
+    materializing path: tree_add for sign=+1, tree_axpy otherwise."""
+    if sign == 1.0:
+        return leaf + theta
+    return (leaf.astype(jnp.float32)
+            + sign * theta.astype(jnp.float32)).astype(leaf.dtype)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ProbeCtx:
+    """Static descriptor of a fused probe evaluation (hashable; the traced
+    step/seed scalars travel in the ``Probe`` pytree, NOT in this object).
+
+    ``signs`` is the static tuple of probe signs — (1.0,) for a forward
+    probe, (1.0, −1.0) for an antithetic central pair (which routes weight
+    matmuls through the single-pass pair kernel).
+    """
+
+    signs: tuple = (1.0,)
+    dtheta: float = 1e-3
+    tau_p: int = 1
+    impl: Optional[str] = None      # pallas | interpret | ref | None=auto
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.signs)
+
+    @property
+    def is_pair(self) -> bool:
+        return self.signs == (1.0, -1.0)
+
+
+class Probe(typing.NamedTuple):
+    """One probe evaluation request: traced scalars + static ProbeCtx.
+
+    A NamedTuple pytree whose ``ctx`` field is register_static, so the whole
+    object threads through jit/scan closures with only (step, seed) traced.
+    """
+
+    step: jnp.ndarray               # int32 global iteration n
+    seed: jnp.ndarray               # uint32 probe seed
+    ctx: ProbeCtx
+
+    def lseed(self, leaf_id):
+        """Per-leaf kernel seed — identical hash chain to ``generate``."""
+        pert_step = jnp.asarray(self.step, jnp.int32) // jnp.int32(
+            self.ctx.tau_p)
+        return leaf_seed(self.seed, pert_step, leaf_id)
+
+    def leaf_theta(self, shape, dtype, leaf_id, offset=0):
+        """Materialized θ̃ for a (slice of a) leaf — the fallback for leaves
+        the kernels don't cover (biases, norm scales, embeddings)."""
+        return rademacher_leaf(
+            shape, dtype, leaf_id, step=self.step, seed=self.seed,
+            dtheta=self.ctx.dtheta, tau_p=self.ctx.tau_p, offset=offset)
 
 
 def orthogonality_check(ptype, n_params, n_steps, *, seed=0, dtheta=1.0, tau_p=1):

@@ -79,12 +79,12 @@ def make_probe_parallel_step(
         return new_params, {"cost": cost.astype(jnp.float32),
                             "c_tilde_mean": jnp.mean(jnp.abs(all_c))}
 
-    shard = jax.shard_map(
+    from repro.distributed.compat import shard_map
+    shard = shard_map(
         run, mesh=mesh,
         in_specs=(P(), P(), P(probe_axis)),
         out_specs=(P(), P()),
-        axis_names=frozenset({probe_axis}),
-        check_vma=False,
+        manual_axes={probe_axis},
     )
 
     @jax.jit

@@ -34,6 +34,14 @@ def leaf_meta(tree):
     return metas
 
 
+def leaf_id_tree(tree):
+    """Same-structure tree whose leaves are their python-int leaf ids
+    (tree_flatten order) — the ids the perturbation generator hashes.
+    Structure is static under jit, so the ids are static too."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(treedef, list(range(len(leaves))))
+
+
 def tree_add(a, b):
     return jax.tree_util.tree_map(jnp.add, a, b)
 

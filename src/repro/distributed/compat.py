@@ -1,0 +1,42 @@
+"""Version-tolerant wrappers for the jax distribution APIs we use.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.make_mesh(..., axis_types=...)``);
+older installs (≤ 0.4.x) expose the same semantics under
+``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)`` and
+a ``make_mesh`` without ``axis_types``.  Everything funnels through here so
+the call sites stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis_types when the API has them."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(AxisType.Auto,) * len(axis_shapes))
+    except (ImportError, AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
+    """shard_map that is manual over ``manual_axes`` (None = all mesh axes)
+    and automatic elsewhere, with replication checking disabled."""
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if manual_axes is not None:
+            kw["axis_names"] = frozenset(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    # Old jax: partial-auto shard_map lowers to a PartitionId instruction
+    # the 0.4.x SPMD partitioner rejects, so run fully manual — specs
+    # already describe every mesh axis (unmentioned axes = replicated);
+    # only the *automatic re-sharding* of the inner computation is lost,
+    # not correctness.
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -1,14 +1,22 @@
 """Pallas TPU kernels for MGD compute hot-spots.
 
-* ``perturbed_matmul`` — x @ (W + Δθ·θ̃) with the Rademacher signs generated
-  in VMEM during the MXU matmul (θ̃ never exists in HBM).
-* ``mgd_update``       — fused scalar-replay window update
+* ``perturbed_matmul``      — x @ (W + Δθ·θ̃) with the Rademacher signs
+  generated in VMEM during the MXU matmul (θ̃ never exists in HBM).
+* ``perturbed_matmul_pair`` — the antithetic probe pair
+  (x₊ @ (W+θ̃), x₋ @ (W−θ̃)) in one grid pass: W is read from HBM ONCE per
+  central-difference probe pair.
+* ``mgd_update``            — fused scalar-replay window update
   W −= (η/Δθ)·Σ_j C̃_j·θ̃_j, HBM traffic = one read + one write of W.
+* ``mgd_update_window``     — the same update in the optimizer's exact
+  sequential-axpy float order (bit-identical f32 trajectories; this is the
+  variant ``MGDConfig(fused=True)`` consumes).
 
 ``ops`` holds the jit'd dispatch wrappers (pallas / interpret / ref);
 ``ref`` holds the pure-jnp oracles that share the exact counter hash.
 """
 from . import ops, ref
-from .ops import perturbed_matmul, mgd_update
+from .ops import (mgd_update, mgd_update_window, perturbed_matmul,
+                  perturbed_matmul_pair)
 
-__all__ = ["ops", "ref", "perturbed_matmul", "mgd_update"]
+__all__ = ["ops", "ref", "perturbed_matmul", "perturbed_matmul_pair",
+           "mgd_update", "mgd_update_window"]

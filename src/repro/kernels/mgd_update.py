@@ -19,27 +19,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .perturbed_matmul import _fmix32, _GOLDEN
+from .perturbed_matmul import _index_signs, _tile_index
 
 
 def _kernel(lseeds_ref, coefs_ref, w_ref, o_ref, *,
             scale, bk, bn, n_cols, window):
     i = pl.program_id(0)
     j = pl.program_id(1)
-    # i/j are traced program ids — convert via astype, not np.uint32
-    rows = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
-            + (i * bk).astype(jnp.uint32))
-    cols = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
-            + (j * bn).astype(jnp.uint32))
-    idx_g = rows * np.uint32(n_cols) + cols
+    idx_g = _tile_index(i * bk, j * bn, bk, bn, n_cols)
 
     def body(t, acc):
-        h = _fmix32(idx_g * _GOLDEN + lseeds_ref[t])
-        sgn = 1.0 - 2.0 * (h >> np.uint32(31)).astype(jnp.float32)
+        sgn = _index_signs(idx_g, lseeds_ref[t])
         return acc + coefs_ref[t] * sgn
 
     acc = jax.lax.fori_loop(
@@ -49,7 +42,8 @@ def _kernel(lseeds_ref, coefs_ref, w_ref, o_ref, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("eta", "dtheta", "bk", "bn", "interpret")
+    jax.jit, static_argnames=("eta", "dtheta", "bk", "bn", "interpret",
+                              "n_cols")
 )
 def mgd_update(
     w: jnp.ndarray,        # [K, N] parameter matrix
@@ -61,8 +55,13 @@ def mgd_update(
     bk: int = 256,
     bn: int = 256,
     interpret: bool = False,
+    n_cols: int | None = None,
 ) -> jnp.ndarray:
-    """W − (η/Δθ)·Σ_j coefs[j]·signs_j, fused; returns the updated W."""
+    """W − (η/Δθ)·Σ_j coefs[j]·signs_j, fused; returns the updated W.
+
+    ``n_cols`` overrides the sign-indexing row stride (the unpadded N) when
+    W arrives zero-padded on its last dim — see perturbed_matmul.
+    """
     kdim, n = w.shape
     bk, bn = min(bk, kdim), min(bn, n)
     assert kdim % bk == 0 and n % bn == 0, (w.shape, bk, bn)
@@ -71,7 +70,88 @@ def mgd_update(
 
     kernel = functools.partial(
         _kernel, scale=float(eta) / float(dtheta),
-        bk=bk, bn=bn, n_cols=n, window=window,
+        bk=bk, bn=bn, n_cols=n_cols or n, window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(kdim // bk, n // bn),
+            in_specs=[pl.BlockSpec((bk, bn), lambda i, j, *_: (i, j))],
+            out_specs=pl.BlockSpec((bk, bn), lambda i, j, *_: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((kdim, n), w.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lseeds, jnp.uint32), jnp.asarray(coefs, jnp.float32), w)
+
+
+# ---------------------------------------------------------------------------
+# Exact-order window update (the optimizer's fused path)
+# ---------------------------------------------------------------------------
+#
+# The kernel above computes sum-then-subtract, which is the natural fused
+# form but NOT the floating-point order of the reference optimizer
+# (core/mgd.py applies the window sequentially:
+#     W ← W + a_j·θ̃_j,  θ̃_j = Δθ·sign_j,  one axpy per window step).
+# ``mgd_update_window`` reproduces that exact association —
+#     W ← W + α·((Δθ·sign_j)·coef_j)   for j = 0..J−1, in order —
+# so the fused optimizer path is bit-identical (f32) to the materializing
+# path while still paying only read-W + write-W in HBM traffic.
+
+
+def _window_kernel(lseeds_ref, coefs_ref, w_ref, o_ref, *,
+                   alpha, dtheta, bk, bn, n_cols, window):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    idx_g = _tile_index(i * bk, j * bn, bk, bn, n_cols)
+
+    def body(t, w32):
+        sgn = _index_signs(idx_g, lseeds_ref[t])
+        # association mirrors tree_scale→tree_axpy: α·((Δθ·sgn)·coef).
+        # The barrier pins the mul's own rounding step — without it XLA
+        # contracts mul+add into an FMA and the result drifts 1 ulp off
+        # the reference optimizer's two-rounding chain.
+        term = jax.lax.optimization_barrier(
+            alpha * ((dtheta * sgn) * coefs_ref[t]))
+        return w32 + term
+
+    w32 = jax.lax.fori_loop(
+        0, window, body, w_ref[...].astype(jnp.float32)
+    )
+    o_ref[...] = w32.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "dtheta", "bk", "bn", "interpret",
+                              "n_cols")
+)
+def mgd_update_window(
+    w: jnp.ndarray,        # [K, N] parameter matrix
+    lseeds: jnp.ndarray,   # [J] uint32 — leaf_seed per window step
+    coefs: jnp.ndarray,    # [J] f32   — per-step scalar coefficient
+    *,
+    alpha: float,
+    dtheta: float,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+    n_cols: int | None = None,
+) -> jnp.ndarray:
+    """W + α·Σ_j (Δθ·sign_j)·coefs[j], applied sequentially in j.
+
+    Bit-exact (f32) fused form of the optimizer's per-step axpy chain; the
+    coefficients carry whatever scalar the caller's order requires
+    (C̃/Δθ² for τ_θ=1 with α=−η; −η·C̃/Δθ² for replay with α=1).
+    """
+    kdim, n = w.shape
+    bk, bn = min(bk, kdim), min(bn, n)
+    assert kdim % bk == 0 and n % bn == 0, (w.shape, bk, bn)
+    window = lseeds.shape[0]
+    assert coefs.shape == (window,)
+
+    kernel = functools.partial(
+        _window_kernel, alpha=float(alpha), dtheta=float(dtheta),
+        bk=bk, bn=bn, n_cols=n_cols or n, window=window,
     )
     return pl.pallas_call(
         kernel,

@@ -31,9 +31,28 @@ def perturbed_matmul_ref(x, w, lseed, *, dtheta, sign=1.0, out_dtype=None):
     return y.astype(out_dtype or x.dtype)
 
 
+def perturbed_matmul_pair_ref(xp, xm, w, lseed, *, dtheta, out_dtype=None):
+    """(xp @ (W+θ̃), xm @ (W−θ̃)) — two materialized matmuls sharing θ̃."""
+    yp = perturbed_matmul_ref(xp, w, lseed, dtheta=dtheta, sign=1.0,
+                              out_dtype=out_dtype)
+    ym = perturbed_matmul_ref(xm, w, lseed, dtheta=dtheta, sign=-1.0,
+                              out_dtype=out_dtype)
+    return yp, ym
+
+
 def mgd_update_ref(w, lseeds, coefs, *, eta, dtheta):
     """W − (η/Δθ)·Σ_j coefs[j]·signs_j — materializes every window sign."""
     acc = jnp.zeros(w.shape, jnp.float32)
     for j in range(lseeds.shape[0]):
         acc = acc + coefs[j] * leaf_signs(lseeds[j], w.shape)
     return (w.astype(jnp.float32) - (eta / dtheta) * acc).astype(w.dtype)
+
+
+def mgd_update_window_ref(w, lseeds, coefs, *, alpha, dtheta):
+    """Sequential-axpy window update, association identical to the kernel:
+    W ← W + α·((Δθ·sign_j)·coefs[j]) for j = 0..J−1 in order."""
+    w32 = w.astype(jnp.float32)
+    for j in range(lseeds.shape[0]):
+        sgn = leaf_signs(lseeds[j], w.shape)
+        w32 = w32 + alpha * ((dtheta * sgn) * coefs[j])
+    return w32.astype(w.dtype)

@@ -15,17 +15,17 @@ the probe axis (core/probe_parallel.py) or a pipeline axis
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist, as a 1-D "data" mesh (CPU tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("data",))

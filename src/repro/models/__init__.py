@@ -1,10 +1,14 @@
 """Model zoo substrate: pure-functional JAX decoders for the 10 assigned
 architectures plus the paper's own MLP/CNN networks."""
 from .config import ArchConfig
-from .transformer import (init_cache, model_decode, model_forward, model_init,
-                          model_loss, model_prefill)
+from .transformer import (init_cache, make_transformer_probe_fn, model_decode,
+                          model_forward, model_forward_perturbed, model_init,
+                          model_loss, model_prefill, model_probe_costs,
+                          supports_fused_probe)
 
 __all__ = [
     "ArchConfig", "model_init", "model_forward", "model_loss",
     "model_prefill", "model_decode", "init_cache",
+    "model_forward_perturbed", "model_probe_costs",
+    "make_transformer_probe_fn", "supports_fused_probe",
 ]

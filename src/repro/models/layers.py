@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import perturbations as pert
+from repro.kernels import ops as kops
+
 
 def dense_init(key, d_in, d_out, *, bias=False, dtype=jnp.float32, scale=None):
     scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
@@ -87,6 +90,75 @@ def glu_mlp_init(key, d, d_ff, dtype=jnp.float32):
 def glu_mlp(p, x):
     h = jax.nn.silu(dense(p["gate"], x).astype(jnp.float32)).astype(x.dtype)
     return dense(p["down"], h * dense(p["up"], x))
+
+
+# --- perturbable primitives (MGD fused probe path) --------------------------
+#
+# ``pdense`` is the perturbable counterpart of ``dense``: instead of adding a
+# materialized θ̃ to W in HBM, the weight matmul is routed through the Pallas
+# perturbed-matmul kernels, which regenerate the Rademacher signs in VMEM
+# next to the MXU — a probe forward reads W once, the same bytes as
+# inference.  An antithetic central pair (signs == (+1, −1)) uses the
+# single-pass pair kernel, reading W once per *pair*.  Non-matrix leaves
+# (biases, norm scales) fall back to a materialized θ̃ — they are O(d), not
+# O(d²), so the HBM cost is negligible.
+#
+# All perturbable ops take/return a TUPLE of activation streams, one per
+# probe sign (1 for a forward probe, 2 for a central pair), plus the leaf-id
+# subtree (``repro.core.utils.leaf_id_tree``) that anchors every leaf to the
+# global hash the host generator uses.  ``layer`` (traced, from a
+# stacked-layer scan) selects the row-major slice of stacked leaves via a
+# seed shift — see perturbations.shifted_leaf_seed.
+
+
+def _stream_offset(layer, nelem):
+    """Element offset of layer ``layer``'s slice in a stacked leaf (traced
+    uint32; wraparound matches the generator's uint32 iota)."""
+    return (jnp.asarray(layer, jnp.uint32)
+            * jnp.uint32(int(nelem) & 0xFFFFFFFF))
+
+
+def pleaf(leaf, leaf_id, probe, *, layer=None):
+    """Per-stream perturbed values of a non-matmul leaf (or its layer
+    slice): tuple of leaf + sign_i·θ̃, float order identical to the
+    materializing optimizer path."""
+    offset = 0 if layer is None else _stream_offset(layer, leaf.size)
+    theta = probe.leaf_theta(leaf.shape, leaf.dtype, leaf_id, offset=offset)
+    return tuple(pert.apply_signed(leaf, theta, s) for s in probe.ctx.signs)
+
+
+def pdense(p, xs, ids, probe, *, layer=None):
+    """Perturbable dense: xs (tuple of per-sign streams) @ (W ± θ̃) + (b ± θ̃_b).
+
+    W's perturbation is generated in-kernel (never materialized); the bias
+    falls back to a materialized θ̃.  ``ids`` is the leaf-id subtree aligned
+    with ``p``; ``layer`` the stacked-bank slice index (or None).
+    """
+    ctx = probe.ctx
+    w = p["w"]
+    lseed = probe.lseed(ids["w"])
+    if layer is not None:
+        lseed = pert.shifted_leaf_seed(
+            lseed, _stream_offset(layer, w.shape[-2] * w.shape[-1]))
+    if ctx.is_pair:
+        ys = kops.perturbed_matmul_pair(
+            xs[0], xs[1], w, lseed, dtheta=ctx.dtheta, impl=ctx.impl)
+    else:
+        ys = tuple(
+            kops.perturbed_matmul(
+                x, w, lseed, dtheta=ctx.dtheta, sign=s, impl=ctx.impl)
+            for x, s in zip(xs, ctx.signs))
+    if "b" in p:
+        bs = pleaf(p["b"], ids["b"], probe, layer=layer)
+        ys = tuple(y + b for y, b in zip(ys, bs))
+    return tuple(ys)
+
+
+def prmsnorm(p, xs, ids, probe, *, layer=None, eps=1e-5):
+    """Per-stream rmsnorm with the scale leaf perturbed (materialized)."""
+    scales = pleaf(p["scale"], ids["scale"], probe, layer=layer)
+    return tuple(rmsnorm({"scale": sc}, x, eps)
+                 for sc, x in zip(scales, xs))
 
 
 # --- convolutions for the paper-scale CNNs ---------------------------------

@@ -18,8 +18,10 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost import mse
 from repro.core.noise import ActivationDefects, defective_sigmoid
-from .layers import conv2d, conv2d_init, dense, dense_init, maxpool2
+from repro.core.utils import leaf_id_tree
+from .layers import conv2d, conv2d_init, dense, dense_init, maxpool2, pdense
 
 
 # --- fully-connected sigmoid nets ------------------------------------------
@@ -41,6 +43,38 @@ def mlp_apply(params, x, defects: Optional[Sequence[ActivationDefects]] = None):
         else:
             x = jax.nn.sigmoid(x)
     return x
+
+
+def mlp_apply_perturbed(params, x, probe,
+                        defects: Optional[Sequence[ActivationDefects]] = None):
+    """``mlp_apply`` under perturbation θ̃(probe) — the fused probe path.
+
+    Weight matmuls go through the Pallas perturbed-matmul kernels (θ̃ never
+    materialized; the antithetic pair shares one read of each W); biases get
+    a materialized θ̃.  Returns a tuple of per-sign outputs, one per entry of
+    ``probe.ctx.signs`` — bit-identical (f32) to running ``mlp_apply`` on
+    the materialized θ ± θ̃.
+    """
+    ids = leaf_id_tree(params)
+    xs = tuple(x for _ in probe.ctx.signs)
+    for i, (p, pid) in enumerate(zip(params, ids)):
+        xs = pdense(p, xs, pid, probe)
+        if defects is not None and defects[i] is not None:
+            xs = tuple(defective_sigmoid(h, defects[i]) for h in xs)
+        else:
+            xs = tuple(jax.nn.sigmoid(h) for h in xs)
+    return xs
+
+
+def make_mlp_probe_fn(defects: Optional[Sequence[ActivationDefects]] = None):
+    """probe_fn(params, batch, probe) → [n_signs] MSE costs, for
+    ``MGDConfig(fused=True)`` (see core.mgd.make_mgd_step)."""
+
+    def probe_fn(params, batch, probe):
+        outs = mlp_apply_perturbed(params, batch["x"], probe, defects)
+        return jnp.stack([mse(o, batch["y"]) for o in outs])
+
+    return probe_fn
 
 
 # --- the paper's CNNs -------------------------------------------------------

@@ -22,11 +22,14 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core import perturbations as pert
+from repro.core.utils import leaf_id_tree, tree_add, tree_axpy
 from repro.distributed.sharding import shard
 from .attention import chunked_causal_attention, decode_attention
 from .config import ArchConfig
 from .layers import (dense, dense_init, embed, embedding_init, glu_mlp,
-                     glu_mlp_init, rmsnorm, rmsnorm_init)
+                     glu_mlp_init, pdense, pleaf, prmsnorm, rmsnorm,
+                     rmsnorm_init)
 from .mamba2 import (mamba2_block, mamba2_block_init, mamba2_block_step,
                      mamba2_state_init)
 from .mla import (mla_attention, mla_cache_update, mla_decode, mla_init)
@@ -321,10 +324,7 @@ def model_forward(params, cfg: ArchConfig, batch, *, return_state=False,
     return logits
 
 
-def model_loss(params, cfg: ArchConfig, batch):
-    """Token-mean softmax cross-entropy — MGD's scalar cost."""
-    logits = model_forward(params, cfg, batch)
-    labels = batch["labels"]
+def _loss_from_logits(logits, labels):
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(
@@ -332,6 +332,165 @@ def model_loss(params, cfg: ArchConfig, batch):
     nll = logz - gold
     mask = (labels >= 0).astype(jnp.float32)
     return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def model_loss(params, cfg: ArchConfig, batch):
+    """Token-mean softmax cross-entropy — MGD's scalar cost."""
+    return _loss_from_logits(model_forward(params, cfg, batch),
+                             batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Fused probe path (MGD): forward under θ ± θ̃ without materializing θ̃
+# ---------------------------------------------------------------------------
+#
+# The GQA/MLP weight matmuls — the HBM-dominant leaves — route through the
+# Pallas perturbed-matmul kernels (sign generation in VMEM; the antithetic
+# central pair reads each W tile ONCE).  Norm scales, biases and the
+# embedding table fall back to materialized θ̃ (O(d) or gather-bound).
+# Stacked-layer banks are addressed through the per-layer seed shift, so the
+# in-kernel sign pattern is bit-identical to the host generator's view of
+# the stacked leaf.
+
+
+def _pqkv(p, xs, positions, cfg, ids, probe, layer):
+    b, s, _ = xs[0].shape
+    h, kvh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    qs = tuple(q.reshape(b, s, h, dh)
+               for q in pdense(p["wq"], xs, ids["wq"], probe, layer=layer))
+    ks = tuple(k.reshape(b, s, kvh, dh)
+               for k in pdense(p["wk"], xs, ids["wk"], probe, layer=layer))
+    vs = tuple(v.reshape(b, s, kvh, dh)
+               for v in pdense(p["wv"], xs, ids["wv"], probe, layer=layer))
+    if cfg.qk_norm:
+        qs = prmsnorm(p["q_norm"], qs, ids["q_norm"], probe, layer=layer,
+                      eps=cfg.norm_eps)
+        ks = prmsnorm(p["k_norm"], ks, ids["k_norm"], probe, layer=layer,
+                      eps=cfg.norm_eps)
+    qs = tuple(_rope(cfg, q, positions) for q in qs)
+    ks = tuple(_rope(cfg, k, positions) for k in ks)
+    return qs, ks, vs
+
+
+def _pattn_apply(p, xs, positions, cfg: ArchConfig, ids, probe, layer):
+    b, s, _ = xs[0].shape
+    qs, ks, vs = _pqkv(p, xs, positions, cfg, ids, probe, layer)
+    ys = []
+    for q, k, v in zip(qs, ks, vs):
+        q = shard(q, "batch", None, "model", None)
+        k = shard(k, "batch", None, "model", None)
+        v = shard(v, "batch", None, "model", None)
+        y = chunked_causal_attention(
+            q, k, v, q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            impl=cfg.attn_impl)
+        ys.append(y.reshape(b, s, -1))
+    return pdense(p["wo"], tuple(ys), ids["wo"], probe, layer=layer)
+
+
+def _pglu_mlp(p, xs, ids, probe, layer):
+    gs = pdense(p["gate"], xs, ids["gate"], probe, layer=layer)
+    us = pdense(p["up"], xs, ids["up"], probe, layer=layer)
+    hs = tuple(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+               for g, u, x in zip(gs, us, xs))
+    return pdense(p["down"], hs, ids["down"], probe, layer=layer)
+
+
+def _pblock_apply(p, xs, positions, cfg: ArchConfig, ids, probe, layer):
+    seq_ax = "sp" if cfg.seq_parallel else None
+    xn = prmsnorm(p["ln1"], xs, ids["ln1"], probe, layer=layer,
+                  eps=cfg.norm_eps)
+    att = _pattn_apply(p["attn"], xn, positions, cfg, ids["attn"], probe,
+                       layer)
+    xs = tuple(x + a for x, a in zip(xs, att))
+    xs = tuple(shard(x, "batch", seq_ax, None) for x in xs)
+    ys = _pglu_mlp(
+        p["mlp"],
+        prmsnorm(p["ln2"], xs, ids["ln2"], probe, layer=layer,
+                 eps=cfg.norm_eps),
+        ids["mlp"], probe, layer)
+    xs = tuple(x + y for x, y in zip(xs, ys))
+    return tuple(shard(x, "batch", seq_ax, None) for x in xs)
+
+
+def supports_fused_probe(cfg: ArchConfig) -> bool:
+    """Dense GQA decoders (incl. vlm/audio stub frontends) have the fully
+    fused probe path; MoE/MLA/SSM/hybrid fall back to materializing."""
+    return (cfg.family in ("dense", "vlm", "audio")
+            and not cfg.use_mla and not cfg.n_experts)
+
+
+def model_forward_perturbed(params, cfg: ArchConfig, batch, probe):
+    """Per-sign perturbed logits, θ̃ fused into the weight matmuls.
+
+    Returns a tuple of logits arrays, one per ``probe.ctx.signs`` entry.
+    """
+    assert supports_fused_probe(cfg), cfg.family
+    ids = leaf_id_tree(params)
+    emb, eids = params["embed"], ids["embed"]
+    tables = pleaf(emb["tok"]["table"], eids["tok"]["table"], probe)
+    if "embeds" in batch:
+        xs = tuple(batch["embeds"] for _ in probe.ctx.signs)
+    elif cfg.n_codebooks:
+        toks = batch["tokens"]
+        _, nq, _ = toks.shape
+        offs = (jnp.arange(nq, dtype=toks.dtype) * cfg.vocab)[None, :, None]
+        xs = tuple(jnp.take(t, toks + offs, axis=0).sum(axis=1)
+                   for t in tables)
+    else:
+        xs = tuple(jnp.take(t, batch["tokens"], axis=0) for t in tables)
+    xs = tuple(shard(x, "batch", "sp" if cfg.seq_parallel else None, None)
+               for x in xs)
+    b, s, _ = xs[0].shape
+    positions = _positions(cfg, batch, s, b)
+
+    def body(carry, layer_in):
+        lp, l = layer_in
+        out = _pblock_apply(lp, carry, positions, cfg, ids["layers"], probe,
+                            l)
+        return out, None
+
+    xs, _ = jax.lax.scan(
+        body, xs, (params["layers"], jnp.arange(cfg.n_layers)))
+    xs = prmsnorm(emb["ln_f"], xs, eids["ln_f"], probe, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = tuple(x @ t.T for x, t in zip(xs, tables))
+    else:
+        logits = pdense(emb["head"], xs, eids["head"], probe)
+    logits = tuple(shard(l, "batch", None, "model") for l in logits)
+    if cfg.n_codebooks:
+        logits = tuple(l.reshape(b, s, cfg.n_codebooks, cfg.vocab)
+                       for l in logits)
+    return logits
+
+
+def model_probe_costs(params, cfg: ArchConfig, batch, probe):
+    """probe_fn for ``MGDConfig(fused=True)``: [n_signs] xent costs.
+
+    Fused for dense GQA decoders; other families materialize θ̃ per sign
+    with the exact float order of the unfused optimizer path.
+    """
+    if supports_fused_probe(cfg):
+        logits = model_forward_perturbed(params, cfg, batch, probe)
+        return jnp.stack(
+            [_loss_from_logits(l, batch["labels"]) for l in logits])
+    theta = pert.generate(
+        params, ptype="rademacher", step=probe.step, seed=probe.seed,
+        dtheta=probe.ctx.dtheta, tau_p=probe.ctx.tau_p)
+    costs = []
+    for s in probe.ctx.signs:
+        p_s = tree_add(params, theta) if s == 1.0 else tree_axpy(
+            s, theta, params)
+        costs.append(model_loss(p_s, cfg, batch))
+    return jnp.stack(costs)
+
+
+def make_transformer_probe_fn(cfg: ArchConfig):
+    """Bind ``cfg`` → probe_fn(params, batch, probe) for make_mgd_step."""
+
+    def probe_fn(params, batch, probe):
+        return model_probe_costs(params, cfg, batch, probe)
+
+    return probe_fn
 
 
 # ---------------------------------------------------------------------------

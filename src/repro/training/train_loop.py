@@ -43,6 +43,7 @@ def train_mgd(
     checkpoint_every: int = 0,
     resume: bool = True,
     log: Optional[Callable] = print,
+    probe_fn: Optional[Callable] = None,   # fused probe path (cfg.fused)
 ) -> TrainResult:
     """Run MGD for ``num_steps`` iterations (τ_p ticks)."""
     state = mgd_init(params, cfg)
@@ -54,7 +55,7 @@ def train_mgd(
         if log:
             log(f"[mgd] resumed from step {start_step}")
 
-    step_fn = make_mgd_step(loss_fn, cfg)
+    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn)
 
     def body(carry, _):
         p, s = carry

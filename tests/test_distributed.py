@@ -74,8 +74,8 @@ def test_param_specs_right_alignment():
 def test_probe_parallel_converges():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp
-        mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((2, 2), ("pod", "data"))
         from repro.core.mgd import MGDConfig
         from repro.core.probe_parallel import make_probe_parallel_step
         target = jnp.array([1.0, -2.0, 3.0, 0.5])
@@ -100,8 +100,8 @@ def test_probe_parallel_converges():
 def test_pipeline_forward_exact():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         from repro.distributed.pipeline import pipeline_forward
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (4, 8, 8)) * 0.3
@@ -124,8 +124,8 @@ def test_sharded_mgd_step_runs_on_mesh():
     8-device (2,4) mesh with the production sharding rules."""
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, functools
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         from repro.configs import get_smoke_config
         from repro.core import MGDConfig, make_mgd_step, mgd_init
         from repro.distributed import sharding as shd
@@ -160,15 +160,14 @@ def test_elastic_restore_across_meshes(tmp_path):
     out = _run_subprocess(f"""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.compat import make_mesh
         from repro.training import checkpoint as ckpt
         params = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-        mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh1 = make_mesh((2, 4), ("data", "model"))
         sh1 = {{"w": NamedSharding(mesh1, P("data", "model"))}}
         p1 = jax.device_put(params, sh1)
         ckpt.save(r"{tmp_path}", 3, p1)
-        mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = make_mesh((4, 2), ("data", "model"))
         sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
         p2, _, step = ckpt.restore(r"{tmp_path}", params, shardings=sh2)
         np.testing.assert_array_equal(np.asarray(p2["w"]),

@@ -1,0 +1,167 @@
+"""Fused probe execution path: the optimizer hot loop routed through the
+Pallas kernels must be *bit-identical* (f32) to the materializing path —
+same murmur3 hash, same float association, θ̃ never in HBM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MGDConfig, make_mgd_step, mgd_init, mse
+from repro.core import perturbations as pert
+from repro.core.utils import tree_add, tree_axpy
+from repro.kernels import ops, ref
+from repro.models.simple import make_mlp_probe_fn, mlp_apply, mlp_init
+
+XOR_X = jnp.array([[0., 0.], [1., 0.], [0., 1.], [1., 1.]], jnp.float32)
+XOR_Y = jnp.array([[0.], [1.], [1.], [0.]], jnp.float32)
+BATCH = {"x": XOR_X, "y": XOR_Y}
+
+
+def _mlp_loss(p, b):
+    return mse(mlp_apply(p, b["x"]), b["y"])
+
+
+def _run(cfg, steps=36):
+    params = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+    step = jax.jit(make_mgd_step(
+        _mlp_loss, cfg,
+        probe_fn=make_mlp_probe_fn() if cfg.fused else None))
+    state = mgd_init(params, cfg)
+    cts = []
+    for _ in range(steps):
+        params, state, m = step(params, state, BATCH)
+        cts.append(np.asarray(m["c_tilde"]))
+    return np.array(cts), params
+
+
+@pytest.mark.parametrize("mode", ["forward", "central"])
+@pytest.mark.parametrize("window", [{}, {"replay": True, "tau_theta": 4}])
+def test_fused_bit_identical_mlp(mode, window):
+    """≥32 MGD steps: C̃ sequence AND parameter trajectory bitwise equal
+    between fused=True (interpret kernels) and the materializing path."""
+    base = dict(mode=mode, dtheta=1e-2, eta=0.5, seed=3, **window)
+    c_mat, p_mat = _run(MGDConfig(**base))
+    c_fus, p_fus = _run(MGDConfig(fused=True, kernel_impl="interpret",
+                                  **base))
+    np.testing.assert_array_equal(c_mat, c_fus)
+    for a, b in zip(jax.tree_util.tree_leaves(p_mat),
+                    jax.tree_util.tree_leaves(p_fus)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_requires_probe_fn_and_valid_config():
+    with pytest.raises(ValueError):
+        make_mgd_step(_mlp_loss, MGDConfig(fused=True))
+    with pytest.raises(ValueError):
+        MGDConfig(fused=True, ptype="walsh")
+    with pytest.raises(ValueError):
+        MGDConfig(fused=True, tau_theta=4)          # needs replay
+    with pytest.raises(ValueError):
+        MGDConfig(fused=True, momentum=0.9)
+
+
+# --- pair kernel ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 48, 80), (8, 8, 8), (64, 128, 256),
+                                   (5, 127, 257)])
+def test_perturbed_matmul_pair_matches_two_singles(m, k, n):
+    """One pair-kernel pass == two independent perturbed_matmul calls."""
+    xp = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    xm = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32) * 0.1
+    ls = pert.leaf_seed(7, 3, 2)
+    yp, ym = ops.perturbed_matmul_pair(xp, xm, w, ls, dtheta=0.01,
+                                       impl="interpret")
+    y1 = ops.perturbed_matmul(xp, w, ls, dtheta=0.01, sign=1.0,
+                              impl="interpret")
+    y2 = ops.perturbed_matmul(xm, w, ls, dtheta=0.01, sign=-1.0,
+                              impl="interpret")
+    np.testing.assert_array_equal(np.asarray(yp), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(ym), np.asarray(y2))
+
+
+def test_perturbed_matmul_pair_matches_ref():
+    xp = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
+    xm = jax.random.normal(jax.random.PRNGKey(1), (32, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 96), jnp.float32)
+    ls = pert.leaf_seed(1, 5, 0)
+    yp, ym = ops.perturbed_matmul_pair(xp, xm, w, ls, dtheta=0.05,
+                                       impl="interpret")
+    rp, rm = ref.perturbed_matmul_pair_ref(xp, xm, w, ls, dtheta=0.05)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(rp),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(rm),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- tiling / padding (the _largest_tile fix) -------------------------------
+
+
+@pytest.mark.parametrize("k,n", [(127, 257), (257, 127), (130, 254)])
+def test_prime_dims_pad_not_degenerate(k, n):
+    """Prime/awkward dims must zero-pad to healthy tiles (the old divisor
+    search degraded K=127 → bk=1), and the signs of the real elements must
+    stay anchored to the unpadded leaf."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32) * 0.1
+    ls = pert.leaf_seed(9, 2, 1)
+    y_ref = ref.perturbed_matmul_ref(x, w, ls, dtheta=0.01)
+    y_pal = ops.perturbed_matmul(x, w, ls, dtheta=0.01, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+    coefs = jnp.array([0.3, -0.2], jnp.float32)
+    lseeds = jnp.array([pert.leaf_seed(9, t, 1) for t in (0, 1)], jnp.uint32)
+    u_ref = ref.mgd_update_ref(w, lseeds, coefs, eta=0.1, dtheta=0.01)
+    u_pal = ops.mgd_update(w, lseeds, coefs, eta=0.1, dtheta=0.01,
+                           impl="interpret")
+    np.testing.assert_allclose(np.asarray(u_ref), np.asarray(u_pal),
+                               rtol=1e-4, atol=1e-3)
+
+
+# --- exact-order window update ----------------------------------------------
+
+
+def test_mgd_update_window_matches_sequential_axpy():
+    """mgd_update_window == the optimizer's per-step axpy chain, bitwise,
+    including on a stacked 3-D bank (row-major slice indexing)."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 40, 17), jnp.float32)
+    steps = [5, 6, 7]
+    seed = jnp.uint32(0)
+    lseeds = jnp.array([pert.leaf_seed(seed, t, 0) for t in steps],
+                       jnp.uint32)
+    raw = jnp.array([0.37, -0.21, 0.05], jnp.float32)
+    coefs = jnp.float32(-0.01 / (0.1 * 0.1)) * raw     # replay's a_j
+    fused = ops.mgd_update_window(w, lseeds, coefs, alpha=1.0, dtheta=0.1,
+                                  impl="interpret")
+    w_seq = w
+    for t, c in zip(steps, raw):
+        theta = pert.generate({"w": w}, ptype="rademacher", step=t,
+                              seed=seed, dtheta=0.1)["w"]
+        a = jnp.float32(-0.01 / (0.1 * 0.1)) * c
+        w_seq = tree_axpy(a, {"w": theta}, {"w": w_seq})["w"]
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(w_seq))
+
+
+# --- transformer fused probe -------------------------------------------------
+
+
+def test_transformer_fused_probe_bit_identical():
+    from repro.configs import get_smoke_config
+    from repro.models import (make_transformer_probe_fn, model_init,
+                              model_loss, supports_fused_probe)
+    cfg = get_smoke_config("qwen3-14b").replace(dtype="float32")
+    assert supports_fused_probe(cfg)
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    step, seed = jnp.int32(3), jnp.uint32(7)
+    theta = pert.generate(params, ptype="rademacher", step=step, seed=seed,
+                          dtheta=1e-3)
+    c_plus = model_loss(tree_add(params, theta), cfg, batch)
+    c_minus = model_loss(tree_axpy(-1.0, theta, params), cfg, batch)
+    probe_fn = make_transformer_probe_fn(cfg)
+    ctx = pert.ProbeCtx(signs=(1.0, -1.0), dtheta=1e-3, impl="interpret")
+    costs = probe_fn(params, batch, pert.Probe(step, seed, ctx))
+    np.testing.assert_array_equal(np.asarray(costs[0]), np.asarray(c_plus))
+    np.testing.assert_array_equal(np.asarray(costs[1]), np.asarray(c_minus))
