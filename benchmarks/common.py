@@ -15,12 +15,13 @@ from repro.models.simple import mlp_apply, mlp_init
 
 def train_until(loss_fn, params, cfg: MGDConfig, sample_fn, *,
                 max_steps: int, threshold_fn: Callable,
-                chunk: int = 2000):
+                chunk: int = 2000, plant=None):
     """Run MGD in jitted chunks until threshold_fn(params) or budget.
+    ``plant`` optionally trains against an explicit hardware device.
 
     Returns (params, steps_used, solved).
     """
-    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn)
+    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn, plant=plant)
     state = mgd_init(params, cfg)
     steps = 0
     while steps < max_steps:
@@ -44,11 +45,11 @@ def xor_setup(seed: int):
 
 
 def time_to_solve_xor(cfg: MGDConfig, seed: int, max_steps=60000,
-                      chunk=2000):
+                      chunk=2000, plant=None):
     params, loss_fn, sample_fn = xor_setup(seed)
     _, steps, solved = train_until(
         loss_fn, params, cfg, sample_fn, max_steps=max_steps,
-        threshold_fn=lambda p: xor_mse(p) < 0.04, chunk=chunk)
+        threshold_fn=lambda p: xor_mse(p) < 0.04, chunk=chunk, plant=plant)
     return steps if solved else None
 
 

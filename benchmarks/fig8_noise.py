@@ -1,18 +1,24 @@
-"""Paper Figs. 8–10: noise/defect robustness benchmarks.
+"""Paper Figs. 8–10: noise/defect robustness benchmarks, on hardware plants.
 
-fig8  — cost-signal noise σ_C: training time grows, then convergence fails.
-fig9  — update noise σ_θ: τ_θ = 100 tolerates noise that τ_θ = 1 cannot.
-fig10 — activation defects σ_a: moderate defects only slow training.
+Every imperfect device is an explicit ``repro.hardware`` plant driven
+through the one MGD code path (no optimizer-side noise flags):
+
+fig8  — σ_C cost-readout noise (``NoisyPlant``): training time grows,
+        then convergence fails.
+fig9  — σ_θ write noise (``NoisyPlant``): τ_θ = 100 tolerates noise that
+        τ_θ = 1 cannot.
+fig10 — σ_a activation defects (defective-device plant): moderate
+        defects only slow training.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.core import MGDConfig, mse
-from repro.core.noise import sample_defects
+from repro.core import MGDConfig
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler
-from repro.models.simple import mlp_apply, mlp_init
+from repro.hardware import noisy_mlp_plant
+from repro.models.simple import mlp_init
 
 from .common import median, time_to_solve_xor, train_until
 
@@ -21,55 +27,68 @@ N_SEEDS = 3
 
 def run():
     rows = []
-    # fig8: cost noise sweep
+    # fig8: cost-readout noise sweep (device seed = param seed → three
+    # different chips, the paper's device-to-device axis)
     for sigma_c in (0.0, 1e-3, 1e-2, 3e-1):
-        cfg = MGDConfig(dtheta=1e-2, eta=1.0, cost_noise=sigma_c)
-        times = [time_to_solve_xor(cfg, s, max_steps=60000, chunk=3000)
-                 for s in range(N_SEEDS)]
+        cfg = MGDConfig(dtheta=1e-2, eta=1.0)
+        times = []
+        for s in range(N_SEEDS):
+            plant = noisy_mlp_plant((2, 2, 1), sigma_c=sigma_c,
+                                    dtheta=cfg.dtheta, device_seed=s)
+            times.append(time_to_solve_xor(cfg, s, max_steps=60000,
+                                           chunk=3000, plant=plant))
         solved = [t for t in times if t is not None]
         rows.append({
             "bench": "fig8", "name": f"sigma_c_{sigma_c}_steps",
             "value": median(solved) if solved else -1,
-            "detail": f"{len(solved)}/{N_SEEDS} solved",
+            "detail": f"{len(solved)}/{N_SEEDS} solved "
+                      f"({'IdealPlant' if sigma_c == 0 else 'NoisyPlant'})",
         })
-    # fig9: update noise at tau_theta 1 vs 100 (η·τ_θ held constant so the
+    # fig9: write noise at tau_theta 1 vs 100 (η·τ_θ held constant so the
     # update magnitude matches; the noise-per-write is then relatively
     # τ_θ× smaller for the long integration — paper Fig. 9b/d)
     for tau in (1, 100):
         for sigma_t in (0.1, 0.4):
-            cfg = MGDConfig(dtheta=1e-2, eta=1.0 / tau, tau_theta=tau,
-                            update_noise=sigma_t)
-            times = [time_to_solve_xor(cfg, s, max_steps=60000, chunk=3000)
-                     for s in range(N_SEEDS)]
+            cfg = MGDConfig(dtheta=1e-2, eta=1.0 / tau, tau_theta=tau)
+            times = []
+            for s in range(N_SEEDS):
+                plant = noisy_mlp_plant((2, 2, 1), sigma_theta=sigma_t,
+                                        dtheta=cfg.dtheta, device_seed=s)
+                times.append(time_to_solve_xor(cfg, s, max_steps=60000,
+                                               chunk=3000, plant=plant))
             solved = [t for t in times if t is not None]
             rows.append({
                 "bench": "fig9",
                 "name": f"tau{tau}_sigma_theta_{sigma_t}_converged",
                 "value": len(solved) / N_SEEDS,
-                "detail": "paper: larger tau_theta suppresses update noise",
+                "detail": "paper: larger tau_theta suppresses update noise "
+                          "(NB the 60k budget is only 600 updates at "
+                          "tau=100 — plateau-dominated at xor scale; "
+                          "tests/test_noise_robustness.py asserts the "
+                          "magnitude mechanism directly)",
             })
-    # fig10: activation defects
+    # fig10: activation defects — the defect pattern is part of the device
+    # (per-device seed), invisible to the optimizer
     x, y = tasks.xor_dataset()
     for sigma_a in (0.0, 0.1, 0.25):
         solved_count = 0
         for seed in range(N_SEEDS):
-            defects = [sample_defects(seed, 2, sigma_a),
-                       sample_defects(seed + 99, 1, sigma_a)]
-            loss_fn = lambda p, b: mse(                      # noqa: E731
-                mlp_apply(p, b["x"], defects=defects), b["y"])
+            plant = noisy_mlp_plant((2, 2, 1), sigma_a=sigma_a,
+                                    device_seed=seed)
             params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
             cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=seed)
 
-            def thresh(p, d=defects):
-                return float(mse(mlp_apply(p, x, defects=d), y)) < 0.05
+            def thresh(p, plant=plant):
+                return float(plant.loss_fn(p, {"x": x, "y": y})) < 0.05
 
             _, steps, ok = train_until(
-                loss_fn, params, cfg, dataset_sampler(x, y, 1),
-                max_steps=60000, threshold_fn=thresh, chunk=3000)
+                None, params, cfg, dataset_sampler(x, y, 1),
+                max_steps=60000, threshold_fn=thresh, chunk=3000,
+                plant=plant)
             solved_count += int(ok)
         rows.append({
             "bench": "fig10", "name": f"sigma_a_{sigma_a}_converged",
             "value": solved_count / N_SEEDS,
-            "detail": "static per-neuron logistic defects",
+            "detail": "static per-neuron logistic defects (device plant)",
         })
     return rows

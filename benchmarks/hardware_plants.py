@@ -1,0 +1,135 @@
+"""Hardware-plant robustness curves (EXPERIMENTS.md §Hardware).
+
+One optimizer, many devices: the same ``MGDConfig`` drives IdealPlant,
+NoisyPlant (σ_C / σ_θ / σ_a), and QuantizedPlant (k-bit DAC, slow-write
+τ_w) on xor and nist7x7 — the scenario matrix the plant interface
+unlocks.  Also projects wall-clock per-step cost from ``PlantMeta``
+latency metadata (Table-3 style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MGDConfig, make_mgd_epoch, mgd_init
+from repro.data import tasks
+from repro.data.pipeline import dataset_sampler, generator_sampler
+from repro.hardware import (PlantMeta, mlp_device_fns, noisy_mlp_plant,
+                            quantized_mlp_plant)
+from repro.models.simple import mlp_apply, mlp_init
+
+from .common import median, train_until
+
+N_SEEDS = 3
+XOR_PLANTS = [
+    ("ideal", dict()),
+    ("sigma_c_1e-3", dict(sigma_c=1e-3)),
+    ("sigma_c_1e-2", dict(sigma_c=1e-2)),
+    ("sigma_theta_0.1", dict(sigma_theta=0.1)),
+    ("sigma_a_0.15", dict(sigma_a=0.15)),
+]
+# w_clip=8: the 2-2-1 XOR solution needs |w| ≈ 5–7, so a ±2 swing makes
+# CLIPPING the binding constraint (0/3 solve at any bit depth); at ±8 the
+# curve measures quantization itself (LSB 16/(2^bits − 1)).
+XOR_DACS = [("dac10", dict(bits=10, w_clip=8.0)),
+            ("dac8", dict(bits=8, w_clip=8.0)),
+            ("dac6", dict(bits=6, w_clip=8.0)),
+            ("dac8_tauw4", dict(bits=8, w_clip=8.0, write_tau=4.0))]
+
+
+def _xor_row(name, plant_fn, detail):
+    """Steps to solve xor ON THE DEVICE: the solved threshold reads the
+    plant's own cost (defects included) — the optimizer's actual target,
+    not a defect-free twin's."""
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0)
+    x, y = tasks.xor_dataset()
+    times = []
+    for s in range(N_SEEDS):
+        plant = plant_fn(s)
+        params = mlp_init(jax.random.PRNGKey(s), (2, 2, 1))
+
+        def thresh(p, plant=plant):
+            return float(plant.loss_fn(p, {"x": x, "y": y})) < 0.04
+
+        _, steps, ok = train_until(
+            None, params, cfg, dataset_sampler(x, y, 1),
+            max_steps=60000, threshold_fn=thresh, chunk=3000, plant=plant)
+        times.append(steps if ok else None)
+    solved = [t for t in times if t is not None]
+    return {
+        "bench": "hw_plants", "name": f"xor_{name}_steps",
+        "value": median(solved) if solved else -1,
+        "detail": f"{len(solved)}/{N_SEEDS} solved; {detail}",
+    }
+
+
+def _nist_accuracy(plant, defects, seed, steps=30000, chunk=6000):
+    """49-4-4 nist7x7 through ``plant``; accuracy read on the device
+    (its defects included) over a fixed eval batch."""
+    params = mlp_init(jax.random.PRNGKey(seed), (49, 4, 4))
+    cfg = MGDConfig(dtheta=1e-2, eta=0.1, seed=seed)
+    sample_fn = generator_sampler(tasks.nist7x7_batch, 8, seed=11 + seed)
+    run = make_mgd_epoch(None, cfg, chunk, sample_fn, plant=plant)
+    state = mgd_init(params, cfg)
+    for _ in range(steps // chunk):
+        params, state, _ = run(params, state)
+    xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
+    pred = mlp_apply(params, xe, defects=defects)
+    return float(jnp.mean((jnp.argmax(pred, -1)
+                           == jnp.argmax(ye, -1)).astype(jnp.float32)))
+
+
+def run():
+    rows = []
+    for name, kw in XOR_PLANTS:
+        rows.append(_xor_row(
+            name,
+            lambda s, kw=kw: noisy_mlp_plant((2, 2, 1), dtheta=1e-2,
+                                             device_seed=s, **kw),
+            f"NoisyPlant {kw or 'σ=0'}"))
+    for name, kw in XOR_DACS:
+        rows.append(_xor_row(
+            name,
+            lambda s, kw=kw: quantized_mlp_plant((2, 2, 1), device_seed=s,
+                                                 **kw),
+            f"QuantizedPlant {kw}"))
+
+    # nist7x7: ideal vs full §3.5 device vs 8-bit DAC device
+    nist_devices = [
+        ("ideal", dict(), dict()),
+        ("noisy", dict(sigma_c=1e-4, sigma_theta=0.01, sigma_a=0.15),
+         dict()),
+        ("dac8", dict(), dict(bits=8)),
+    ]
+    for name, noisy_kw, dac_kw in nist_devices:
+        accs = []
+        for seed in range(N_SEEDS):
+            sigma_a = noisy_kw.get("sigma_a", 0.0)
+            _, _, defects = mlp_device_fns((49, 4, 4), sigma_a=sigma_a,
+                                           device_seed=seed)
+            if dac_kw:
+                plant = quantized_mlp_plant((49, 4, 4), device_seed=seed,
+                                            **dac_kw)
+            else:
+                plant = noisy_mlp_plant((49, 4, 4), dtheta=1e-2,
+                                        device_seed=seed, **noisy_kw)
+            accs.append(_nist_accuracy(plant, defects, seed))
+        rows.append({
+            "bench": "hw_plants", "name": f"nist7x7_{name}_accuracy",
+            "value": median(accs),
+            "detail": f"median of {N_SEEDS} devices, 30k steps",
+        })
+
+    # Table-3-style projection from plant metadata
+    for name, meta in [
+        ("HW1_chip_in_loop", PlantMeta(name="HW1", read_latency_s=1e-3,
+                                       external=True)),
+        ("HW2_memcompute", PlantMeta(name="HW2", read_latency_s=10e-9)),
+    ]:
+        rows.append({
+            "bench": "hw_plants", "name": f"xor_{name}_projected_s",
+            "value": 1e4 * meta.step_latency_s(reads_per_step=1,
+                                               writes_per_step=0),
+            "detail": "1e4-step xor budget × PlantMeta read latency",
+        })
+    return rows

@@ -21,6 +21,7 @@ BENCHES = [
     "fig8_noise",
     "table2_datasets",
     "table3_hardware",
+    "hardware_plants",
     "fused_probe",
     "roofline_report",
 ]

@@ -1,94 +1,54 @@
-"""Chip-in-the-loop training (paper §4 / §6).
+"""Chip-in-the-loop training through ``hardware.ExternalPlant`` (paper §4/§6).
 
-Emulates an analog hardware accelerator behind an OPAQUE device interface:
-the trainer may only (1) write parameters, (2) present an input, (3) read
-the scalar cost.  The device internally has per-neuron activation defects
-(σ_a), parameter-write noise (σ_θ) and cost-readout noise (σ_C) that the
-trainer never models — exactly the regime where backprop-through-a-model
-fails (the paper cites a 97.6% → 63.9% accuracy drop on transfer) and
-model-free MGD shines.
+An analog accelerator sits behind an OPAQUE lab-instrument API — write
+parameters, present an input, read ONE scalar cost.  The device
+internally has per-neuron activation defects (σ_a), parameter-write
+noise (σ_θ) and cost-readout noise (σ_C) that the trainer never models —
+exactly the regime where backprop-through-a-model fails (the paper cites
+a 97.6% → 63.9% accuracy drop on transfer) and model-free MGD shines.
+
+Since PR 2 the trainer side is the SAME ``make_mgd_step`` that drives
+every in-process device: ``ExternalPlant`` lowers each cost read to an
+ordered host callback (set_params → present batch → measure_cost), so
+the optimizer has no access to device internals at all — swap the
+``SimulatedAnalogChip`` for a serial-port driver with the same two
+methods and nothing else changes.
 
     PYTHONPATH=src python examples/chip_in_the_loop.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init, mse
-from repro.core.noise import sample_defects
+from repro.core import MGDConfig, make_mgd_step, mgd_init
 from repro.data.tasks import nist7x7_batch
-from repro.models.simple import mlp_apply, mlp_init
-
-
-class AnalogChip:
-    """The 'hardware': a 49-4-4 sigmoidal network with fabrication defects.
-
-    Nothing outside this class may see the defects or the internal
-    parameters — only set_params / measure_cost, like a lab instrument.
-    """
-
-    def __init__(self, seed=0, sigma_a=0.15, sigma_theta=0.01,
-                 sigma_c=1e-4):
-        self._defects = [sample_defects(seed, 4, sigma_a),
-                         sample_defects(seed + 1, 4, sigma_a)]
-        self._sigma_theta = sigma_theta
-        self._sigma_c = sigma_c
-        self._params = None
-        self._key = jax.random.PRNGKey(seed + 2)
-        self.writes = 0
-
-    def _noise(self, shape):
-        self._key, k = jax.random.split(self._key)
-        return jax.random.normal(k, shape)
-
-    def set_params(self, params):
-        """Analog memory write — each write lands with noise."""
-        self.writes += 1
-        self._params = jax.tree_util.tree_map(
-            lambda w: w + self._sigma_theta * self._noise(w.shape), params)
-
-    def infer(self, x):
-        return mlp_apply(self._params, x, defects=self._defects)
-
-    def measure_cost(self, x, y):
-        """Scalar cost readout with measurement noise."""
-        c = mse(self.infer(x), y)
-        return float(c + self._sigma_c * self._noise(())[()])
+from repro.hardware import ExternalPlant, SimulatedAnalogChip
+from repro.models.simple import mlp_init
 
 
 def main():
-    chip = AnalogChip()
+    chip = SimulatedAnalogChip((49, 4, 4), seed=0, sigma_a=0.15,
+                               sigma_theta=0.01, sigma_c=1e-4)
+    plant = ExternalPlant(chip)
+
     # the trainer's view: parameters it *believes* are on the chip
     params = mlp_init(jax.random.PRNGKey(1), (49, 4, 4))
-    cfg = MGDConfig(dtheta=2e-2, eta=0.1, tau_theta=1, seed=0)
-
-    # model-free loss: ship θ to the chip, show the sample, read the cost.
-    # (make_mgd_step wants a jax-traceable callable; chip-in-the-loop runs
-    # eagerly instead, so we hand-roll the central-difference probe.)
-    from repro.core import perturbations as pert
-    from repro.core.utils import tree_add, tree_axpy, tree_scale
+    # central mode: the external plant's ordered host callbacks need the
+    # cond-free step (forward mode's C₀ refresh is a lax.cond).
+    cfg = MGDConfig(dtheta=2e-2, eta=0.1, tau_theta=1, mode="central",
+                    seed=0)
+    state = mgd_init(params, cfg)
+    step_fn = jax.jit(make_mgd_step(None, cfg, plant=plant))
 
     key = jax.random.PRNGKey(7)
-    state_step = 0
     for it in range(4001):
         key, kb = jax.random.split(key)
         x, y = nist7x7_batch(kb, 8)
-        theta_t = pert.generate(params, ptype="rademacher", step=state_step,
-                                seed=cfg.seed, dtheta=cfg.dtheta)
-        chip.set_params(tree_add(params, theta_t))
-        c_plus = chip.measure_cost(x, y)
-        chip.set_params(tree_axpy(-1.0, theta_t, params))
-        c_minus = chip.measure_cost(x, y)
-        c_tilde = 0.5 * (c_plus - c_minus)
-        params = tree_axpy(-cfg.eta * c_tilde / cfg.dtheta ** 2,
-                           theta_t, params)
-        state_step += 1
+        params, state, metrics = step_fn(params, state, {"x": x, "y": y})
+        jax.block_until_ready(params)   # chip I/O is synchronous anyway
         if it % 800 == 0:
             xe, ye = nist7x7_batch(jax.random.PRNGKey(99), 256)
-            chip.set_params(params)
-            acc = float(jnp.mean(
-                (jnp.argmax(chip.infer(xe), -1)
-                 == jnp.argmax(ye, -1)).astype(jnp.float32)))
-            print(f"iter {it:5d}: on-chip cost {c_plus:.4f} "
+            chip.set_params(params)      # commit the belief, then read out
+            acc = chip.measure_accuracy({"x": xe, "y": ye})
+            print(f"iter {it:5d}: on-chip cost {float(metrics['cost']):.4f} "
                   f"accuracy {acc:.3f} (param writes: {chip.writes})")
     print("trained through the opaque interface only — no gradients, no "
           "defect model, no weight readback.")

@@ -46,6 +46,8 @@ class AnalogMGDConfig:
     tau_p: int = 1            # perturbation bandwidth control (1/Δf)
     dt: float = 1.0
     seed: int = 0
+    # σ_C of the implicit device (builds a hardware.NoisyPlant); must stay
+    # 0 when an explicit plant is passed to make_analog_step.
     cost_noise: float = 0.0
 
 
@@ -68,11 +70,23 @@ def analog_init(params: Pytree, cfg: AnalogMGDConfig) -> AnalogMGDState:
 
 
 def make_analog_step(
-    loss_fn: Callable[[Pytree, Any], jnp.ndarray],
+    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
     cfg: AnalogMGDConfig,
     total_params: Optional[int] = None,
+    *,
+    plant=None,
 ):
-    """One dt tick of Algorithm 2.  Returns step_fn(params, state, batch)."""
+    """One dt tick of Algorithm 2.  Returns step_fn(params, state, batch).
+
+    Cost reads and the continuous parameter write go through a
+    ``repro.hardware.Plant`` — the same device models (noisy, quantized,
+    external) the discrete driver composes with.  ``plant=None`` builds
+    the implicit in-process device from the config (``cost_noise`` → a
+    ``NoisyPlant``), bit-identical (f32) to the ideal path at σ = 0.
+    """
+    from repro.core.mgd import _resolve_plant
+    plant = _resolve_plant(loss_fn, cfg, plant=plant)
+
     inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
     a_hp = cfg.tau_hp / (cfg.tau_hp + cfg.dt)
     # G(t) = (dt·e(t)/dt + τ_θ·G)/(τ_θ+dt) — from Alg. 2 line 10
@@ -85,10 +99,8 @@ def make_analog_step(
             params, ptype=cfg.ptype, step=t, seed=cfg.seed,
             dtheta=cfg.dtheta, tau_p=cfg.tau_p, total=total_params,
         )
-        c = loss_fn(tree_add(params, theta_t), batch).astype(jnp.float32)
-        if cfg.cost_noise:
-            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xA7A), t)
-            c = c + cfg.cost_noise * jax.random.normal(key, (), jnp.float32)
+        c = plant.read_cost(tree_add(params, theta_t), batch,
+                            step=t, tag=0).astype(jnp.float32)
         # first tick: prime the filter memory, no update
         c_prev = jnp.where(state.primed, state.c_prev, c)
         c_tilde = a_hp * (state.c_tilde + c - c_prev)
@@ -100,7 +112,9 @@ def make_analog_step(
             * pi.astype(jnp.float32) + a_g_old * gi,
             state.g, theta_t,
         )
-        new_params = tree_axpy(-cfg.eta, g, params)
+        # continuous update: every tick is a physical write event
+        new_params = plant.write_params(
+            tree_axpy(-cfg.eta, g, params), step=t, prev=params)
         new_state = AnalogMGDState(
             t=t + 1, c_prev=c, c_tilde=c_tilde, g=g,
             primed=jnp.ones((), jnp.bool_),

@@ -1,7 +1,9 @@
 """Multiplexed gradient descent — discrete algorithm (paper Algorithm 1).
 
-The MGD step is *model-free*: it consumes only a scalar-valued
-``loss_fn(params, batch) -> cost`` plus the three time constants
+The MGD step is *model-free*: it consumes only a scalar cost oracle — a
+``repro.hardware.Plant`` (ideal, noisy, quantized, or an external chip),
+or equivalently a plain ``loss_fn(params, batch) -> cost`` wrapped into
+the implicit in-process plant — plus the three time constants
 (τ_p, τ_θ, τ_x) and a perturbation family.  One MGD iteration is:
 
     1. (re)generate the perturbation θ̃ for this step            [τ_p]
@@ -32,13 +34,13 @@ EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import perturbations as pert
 from .utils import (
@@ -79,9 +81,12 @@ class MGDConfig:
     probe_impl: str = "map"       # map (sequential) | vmap (parallel/shardable)
     momentum: float = 0.0         # heavy-ball coefficient on G
     seed: int = 0
-    # hardware noise emulation (paper §3.5)
+    # hardware noise emulation (paper §3.5).  These fields describe the
+    # IMPLICIT device (they build a hardware.NoisyPlant internally); when
+    # an explicit plant is passed to make_mgd_step they must stay 0 — the
+    # plant owns all imperfections.
     cost_noise: float = 0.0       # σ_C  — gaussian noise added to every cost read
-    update_noise: float = 0.0     # σ_θ  — update noise, std σ_θ·Δθ (see noise.py)
+    update_noise: float = 0.0     # σ_θ  — update noise, std σ_θ·Δθ (see hardware.plants)
     # bounded-staleness feedback: the update at step n may consume C̃ from
     # step n-d (straggler tolerance; 0 = synchronous paper behaviour)
     staleness: int = 0
@@ -162,22 +167,47 @@ def mgd_init(params: Pytree, cfg: MGDConfig) -> MGDState:
 
 
 # ---------------------------------------------------------------------------
-# Noise helpers (counter-based, deterministic across restarts)
+# Plant resolution (the device the optimizer drives)
 # ---------------------------------------------------------------------------
 
 
-def _gauss_noise(seed, step, tag, shape=()):
-    """Standard-normal noise from a counter-based key — no threaded PRNG
-    state, so checkpoint/restart replays the identical noise sequence."""
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
-    key = jax.random.fold_in(key, step)
-    return jax.random.normal(key, shape, jnp.float32)
+def _resolve_plant(loss_fn, cfg, *, probe_fn=None, plant=None):
+    """The device behind this optimizer run.
 
+    With ``plant=None`` the historical in-process behaviour is rebuilt
+    from the config: ``cost_noise``/``update_noise`` become a
+    ``NoisyPlant`` with the exact historical key derivation, σ = 0 an
+    ``IdealPlant`` — bit-identical (f32) either way.  An explicit plant
+    owns ALL hardware imperfections, so the config noise fields must be
+    zero (anything else would double-count the noise).
+    """
+    # runtime import: repro.hardware.base imports core.utils, so a
+    # module-level import here would be circular.
+    from repro.hardware.base import Plant
+    from repro.hardware.plants import plant_from_config
 
-def _noisy(cost, cfg: MGDConfig, step, tag):
-    if cfg.cost_noise:
-        cost = cost + cfg.cost_noise * _gauss_noise(cfg.seed, step, tag)
-    return cost
+    if plant is None:
+        if loss_fn is None:
+            raise ValueError("need a loss_fn (or an explicit plant)")
+        return plant_from_config(loss_fn, cfg, probe_fn=probe_fn)
+    if not isinstance(plant, Plant):
+        raise TypeError(f"plant must be a repro.hardware.Plant, "
+                        f"got {type(plant).__name__}")
+    if getattr(cfg, "cost_noise", 0.0) or getattr(cfg, "update_noise", 0.0):
+        raise ValueError(
+            "cfg.cost_noise/update_noise describe the implicit device; "
+            "with an explicit plant the plant owns all imperfections — "
+            "set the config fields to 0")
+    if probe_fn is not None and plant.probe_fn is not probe_fn:
+        if plant.probe_fn is not None:
+            raise ValueError("both the plant and make_mgd_step were given "
+                             "a probe_fn — they disagree; set it in one "
+                             "place")
+        # shallow copy so a plant shared across optimizers never inherits
+        # another model's perturbed-apply
+        plant = copy.copy(plant)
+        plant.probe_fn = probe_fn
+    return plant
 
 
 # ---------------------------------------------------------------------------
@@ -194,16 +224,23 @@ def _probe_seed(cfg: MGDConfig, probe) -> jnp.ndarray:
 
 
 def make_mgd_step(
-    loss_fn: Callable[[Pytree, Any], jnp.ndarray],
+    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
     cfg: MGDConfig,
     total_params: Optional[int] = None,
     *,
     probe_fn: Optional[Callable] = None,
+    plant=None,
 ):
     """Build the jittable MGD iteration.
 
     ``loss_fn(params, batch) -> scalar cost`` is the ONLY model interface —
-    MGD never sees the network topology (model-free, paper §1).
+    MGD never sees the network topology (model-free, paper §1).  All cost
+    reads and parameter writes go through a ``repro.hardware.Plant``; pass
+    one explicitly to train against a noisy/quantized/external device, or
+    pass none to get the implicit in-process device (``IdealPlant``, or
+    ``NoisyPlant`` when the config's σ_C/σ_θ fields are set) — bit-identical
+    (f32) to the historical inlined path.  With an explicit plant,
+    ``loss_fn`` may be ``None``: the plant is the only cost oracle.
 
     With ``cfg.fused=True`` the model additionally provides
     ``probe_fn(params, batch, probe: perturbations.Probe) -> [n_signs]``
@@ -212,15 +249,30 @@ def make_mgd_step(
     ``models.make_transformer_probe_fn``) that routes weight matmuls
     through the Pallas kernels so θ̃ never exists in HBM.  The fused path
     produces bit-identical (f32) C̃/parameter trajectories to the
-    materializing path.
+    materializing path, and reaches the kernels through
+    ``plant.apply_perturbed`` so hardware models compose with it.
 
     Returns ``step_fn(params, state, batch) -> (params, state, metrics)``.
     The caller controls τ_x by switching ``batch`` every τ_x calls (the data
     pipeline does this); everything else is internal.
     """
-    if cfg.fused and probe_fn is None:
+    plant = _resolve_plant(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
+    if cfg.fused and not plant.supports_fused:
         raise ValueError("cfg.fused=True needs a probe_fn (the model's "
-                         "perturbed-apply interface)")
+                         "perturbed-apply interface) on the plant")
+    if plant.meta.external:
+        # Ordered host callbacks cannot live inside lax.cond: forward
+        # mode's C₀ refresh and every windowed update (replay or
+        # accumulator select) are conds, and the τ_θ>1 accumulator path
+        # additionally computes a write per step that tree_select then
+        # discards — on a physical device that write already happened.
+        # The cond-free step is central τ_θ=1 (the chip-in-the-loop
+        # configuration); temporal windows belong on the host loop.
+        if cfg.mode != "central" or cfg.tau_theta != 1 or cfg.replay:
+            raise ValueError("external plants need mode='central', "
+                             "tau_theta=1, replay=False — the only "
+                             "cond-free step an ordered host callback "
+                             "can ride (see hardware/external.py)")
 
     def perturbation(params, step, probe=0):
         return pert.generate(
@@ -249,10 +301,8 @@ def make_mgd_step(
         n = state.step
         theta_t = perturbation(params, n, probe)
         if cfg.mode == "central":
-            c_plus = _noisy(loss_fn(tree_add(params, theta_t), batch),
-                            cfg, n, 2 * probe)
-            c_minus = _noisy(loss_fn(tree_axpy(-1.0, theta_t, params), batch),
-                             cfg, n, 2 * probe + 1)
+            c_plus, c_minus = plant.read_cost_pair(
+                params, theta_t, batch, step=n, tag=2 * probe)
             # barrier: pin C̃'s own rounding before the ·1/Δθ² scaling —
             # XLA otherwise folds 0.5·inv_d2 into one constant in SOME
             # programs, breaking fused-vs-materialized bit-equality.
@@ -263,11 +313,12 @@ def make_mgd_step(
         need_c0 = jnp.logical_or(n % cfg.tau_x == 0, n % cfg.tau_theta == 0)
         c0 = jax.lax.cond(
             need_c0,
-            lambda: _noisy(loss_fn(params, batch), cfg, n, 2 * probe).astype(jnp.float32),
+            lambda: plant.read_cost(params, batch, step=n,
+                                    tag=2 * probe).astype(jnp.float32),
             lambda: state.c0,
         )
-        c_pert = _noisy(loss_fn(tree_add(params, theta_t), batch),
-                        cfg, n, 2 * probe + 1)
+        c_pert = plant.read_cost(tree_add(params, theta_t), batch,
+                                 step=n, tag=2 * probe + 1)
         return c_pert - c0, theta_t, c0, c0
 
     def accumulate(params, state, batch):
@@ -292,7 +343,9 @@ def make_mgd_step(
         return e, jnp.mean(cts), c0s.reshape(-1)[0], jnp.mean(cms)
 
     def apply_update(params, state, g_step):
-        """θ ← θ − η·G (Eq. 4), with optional momentum and update noise."""
+        """θ ← θ − η·G (Eq. 4) with optional momentum; the write lands
+        through the plant (write noise / DAC quantization / slow-write
+        lag happen there — identity for the ideal device)."""
         n = state.step
         m = state.m
         if cfg.momentum:
@@ -300,18 +353,8 @@ def make_mgd_step(
             direction = m
         else:
             direction = g_step
-        new_params = tree_axpy(-cfg.eta, direction, params)
-        if cfg.update_noise:
-            # σ_θ is expressed in units of Δθ (paper §3.5 / Fig. 9):
-            # θ ← θ − ηG + N(0, σ_θ·Δθ), one gaussian per element from a
-            # counter-based key (restart-reproducible).
-            def leaf_noise(x, i=[0]):
-                i[0] += 1
-                k = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), i[0])
-                k = jax.random.fold_in(k, n)
-                return x + cfg.update_noise * cfg.dtheta * jax.random.normal(
-                    k, x.shape, jnp.float32).astype(x.dtype)
-            new_params = jax.tree_util.tree_map(leaf_noise, new_params)
+        new_params = plant.write_params(
+            tree_axpy(-cfg.eta, direction, params), step=n, prev=params)
         return new_params, m
 
     # ----- fused probe + update paths (cfg.fused) --------------------------
@@ -331,20 +374,21 @@ def make_mgd_step(
         """Fused probe → (C̃, c0, cost_metric); no θ̃ pytree exists."""
         n = state.step
         if cfg.mode == "central":
-            costs = probe_fn(params, batch, _probe(n, (1.0, -1.0)))
-            c_plus = _noisy(costs[0], cfg, n, 0)
-            c_minus = _noisy(costs[1], cfg, n, 1)
+            costs = plant.apply_perturbed(
+                params, batch, _probe(n, (1.0, -1.0)), step=n, tags=(0, 1))
+            c_plus, c_minus = costs[0], costs[1]
             # same rounding barrier as the materialized probe_once
             c_tilde = jax.lax.optimization_barrier(0.5 * (c_plus - c_minus))
             return c_tilde, state.c0, 0.5 * (c_plus + c_minus)
         need_c0 = jnp.logical_or(n % cfg.tau_x == 0, n % cfg.tau_theta == 0)
         c0 = jax.lax.cond(
             need_c0,
-            lambda: _noisy(loss_fn(params, batch), cfg, n, 0).astype(jnp.float32),
+            lambda: plant.read_cost(params, batch, step=n,
+                                    tag=0).astype(jnp.float32),
             lambda: state.c0,
         )
-        c_pert = _noisy(probe_fn(params, batch, _probe(n, (1.0,)))[0],
-                        cfg, n, 1)
+        c_pert = plant.apply_perturbed(
+            params, batch, _probe(n, (1.0,)), step=n, tags=(1,))[0]
         return c_pert - c0, c0, c0
 
     def _fused_leaf_updates(params, lseeds_of, coefs, alpha, small_update):
@@ -419,7 +463,9 @@ def make_mgd_step(
             replay_c = state.replay_c.at[n % window].set(c_tilde)
             new_params = jax.lax.cond(
                 do_update,
-                lambda: fused_replay_update(params, state, replay_c),
+                lambda: plant.write_params(
+                    fused_replay_update(params, state, replay_c),
+                    step=n, prev=params),
                 lambda: params,
             )
             new_state = state._replace(
@@ -427,7 +473,8 @@ def make_mgd_step(
             )
             return new_params, new_state, metrics
         # tau_theta == 1 (enforced in __post_init__): update every step
-        new_params = fused_update_tau1(params, n, c_tilde)
+        new_params = plant.write_params(
+            fused_update_tau1(params, n, c_tilde), step=n, prev=params)
         new_state = MGDState(
             step=n + 1, c0=c0, g=None, replay_c=None, m=None,
             metric_cost=cost_metric,
@@ -466,7 +513,9 @@ def make_mgd_step(
             replay_c = state.replay_c.at[n % window].set(c_tilde)
             new_params = jax.lax.cond(
                 do_update,
-                lambda: replay_update(params, state, replay_c),
+                lambda: plant.write_params(
+                    replay_update(params, state, replay_c),
+                    step=n, prev=params),
                 lambda: params,
             )
             new_state = state._replace(
@@ -511,14 +560,18 @@ def make_mgd_epoch(
     sample_fn: Callable[[jnp.ndarray], Any],
     *,
     probe_fn: Optional[Callable] = None,
+    plant=None,
 ):
     """Scan ``steps_per_call`` MGD iterations inside one jitted call.
 
     ``sample_fn(sample_index) -> batch`` implements τ_x: iteration n uses
     sample index n // τ_x.  Used by the training loop and benchmarks to
     amortize dispatch overhead (one device program per chunk of steps).
+    Note external plants (ordered host callbacks) cannot live under
+    ``lax.scan``'s cond-free requirement on all jax versions — drive them
+    step-by-step via ``make_mgd_step`` instead.
     """
-    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn)
+    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
 
     def body(carry, _):
         params, state = carry

@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import perturbations as pert
 from .mgd import MGDConfig
-from .utils import tree_add, tree_axpy, tree_scale
+from .utils import tree_axpy
 
 
 def make_probe_parallel_step(
@@ -42,14 +42,27 @@ def make_probe_parallel_step(
     probe_axis: str = "pod",
     param_specs=None,
     batch_specs=None,
+    plant=None,
 ):
     """Build step_fn(params, step, batch) → (params, metrics).
 
     central-difference, τ_θ = 1 (immediate update) — the at-scale serving
     configuration.  params stay replicated over ``probe_axis`` and keep
     their own (model/fsdp) sharding on the automatic axes.
+
+    Cost reads and the parameter write go through a ``hardware.Plant``
+    (implicit ideal/noisy device when ``plant=None``), so every pod may be
+    its own imperfect chip: readout-noise tags are keyed per (step, pod),
+    and the post-all-gather write lands through the plant once per step.
+    Pure-JAX plants only — the probe loop runs inside ``shard_map``.
     """
     assert cfg.mode == "central", "probe-parallel uses central differences"
+    from repro.core.mgd import _resolve_plant
+    plant = _resolve_plant(loss_fn, cfg, plant=plant)
+    if plant.meta.external:
+        raise ValueError("probe-parallel drives pure-JAX plants; an "
+                         "ExternalPlant cannot run inside shard_map "
+                         "(see ROADMAP: multi-chip probe parallelism)")
     n_pods = mesh.shape[probe_axis]
     inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
 
@@ -62,8 +75,8 @@ def make_probe_parallel_step(
         theta = pert.generate(
             params, ptype=cfg.ptype, step=step, seed=pod_seed(pod),
             dtheta=cfg.dtheta, tau_p=cfg.tau_p)
-        c_plus = loss_fn(tree_add(params, theta), batch)
-        c_minus = loss_fn(tree_axpy(-1.0, theta, params), batch)
+        c_plus, c_minus = plant.read_cost_pair(
+            params, theta, batch, step=step, tag=2 * pod)
         c_local = (0.5 * (c_plus - c_minus)).astype(jnp.float32)
         all_c = jax.lax.all_gather(c_local, probe_axis)        # [k] scalars
 
@@ -74,7 +87,9 @@ def make_probe_parallel_step(
             coef = -cfg.eta * inv_d2 * all_c[k] / n_pods
             return tree_axpy(coef, signs, p)
 
-        new_params = jax.lax.fori_loop(0, n_pods, body, params)
+        new_params = plant.write_params(
+            jax.lax.fori_loop(0, n_pods, body, params),
+            step=step, prev=params)
         cost = 0.5 * (c_plus + c_minus)
         return new_params, {"cost": cost.astype(jnp.float32),
                             "c_tilde_mean": jnp.mean(jnp.abs(all_c))}

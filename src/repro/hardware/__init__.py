@@ -1,0 +1,26 @@
+"""Hardware plant abstraction — one device interface for every MGD mode.
+
+Every optimizer driver (Algorithm 1 discrete, Algorithm 2 continuous,
+fused Pallas, probe-parallel) composes with every device model through
+the ``Plant`` protocol:
+
+    IdealPlant      pure JAX, bit-identical (f32) to the in-process path
+    NoisyPlant      σ_C readout noise + σ_θ write noise (paper §3.5)
+    QuantizedPlant  limited-bit DAC weight writes + slow-write τ lag
+    ExternalPlant   host-callback boundary (chip in the loop, §4/§6)
+
+See ``base.py`` for the protocol contract and ``devices.py`` for
+per-device-seed builders (defective MLPs, simulated analog chip).
+"""
+from .base import IdealPlant, Plant, PlantMeta
+from .devices import (SimulatedAnalogChip, mlp_device_fns, noisy_mlp_plant,
+                      quantized_mlp_plant)
+from .external import ExternalPlant
+from .plants import NoisyPlant, QuantizedPlant, plant_from_config
+
+__all__ = [
+    "Plant", "PlantMeta", "IdealPlant", "NoisyPlant", "QuantizedPlant",
+    "ExternalPlant", "plant_from_config",
+    "SimulatedAnalogChip", "mlp_device_fns", "noisy_mlp_plant",
+    "quantized_mlp_plant",
+]

@@ -1,0 +1,142 @@
+"""Concrete device builders: defective MLPs and a simulated analog chip.
+
+Device-to-device variation (paper §3.5, Fig. 10) is expressed here by
+keying every imperfection off one ``device_seed``: two plants built with
+different seeds are two different physical chips — different activation
+defects, different write/readout noise streams — while the same seed
+reproduces the identical chip across restarts (the defect pattern is
+part of the *device*, not of the training state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.cost import mse
+from repro.core.noise import sample_defects
+from repro.models.simple import make_mlp_probe_fn, mlp_apply
+
+from .base import IdealPlant, Plant, PlantMeta
+from .plants import NoisyPlant, QuantizedPlant
+
+
+def mlp_device_fns(sizes: Sequence[int], *, sigma_a: float = 0.0,
+                   device_seed: int = 0, cost=mse):
+    """(loss_fn, probe_fn, defects) for a sigmoidal MLP with per-neuron
+    fabrication defects sampled from ``device_seed`` (σ_a = 0 → exact
+    sigmoid and defects=None, keeping the ideal path bit-identical)."""
+    if sigma_a:
+        defects = [sample_defects(device_seed + i, n, sigma_a)
+                   for i, n in enumerate(sizes[1:])]
+    else:
+        defects = None
+
+    def loss_fn(params, batch):
+        return cost(mlp_apply(params, batch["x"], defects=defects),
+                    batch["y"])
+
+    return loss_fn, make_mlp_probe_fn(defects), defects
+
+
+def noisy_mlp_plant(sizes: Sequence[int], *, sigma_c: float = 0.0,
+                    sigma_theta: float = 0.0, sigma_a: float = 0.0,
+                    dtheta: float = 1e-2, device_seed: int = 0,
+                    cost=mse) -> Plant:
+    """A full §3.5 device: σ_C readout noise, σ_θ write noise, σ_a static
+    activation defects, all drawn from ``device_seed``."""
+    loss_fn, probe_fn, _ = mlp_device_fns(
+        sizes, sigma_a=sigma_a, device_seed=device_seed, cost=cost)
+    if not (sigma_c or sigma_theta):
+        return IdealPlant(loss_fn, probe_fn=probe_fn, meta=PlantMeta(
+            name="mlp-ideal", sigma_a=sigma_a))
+    return NoisyPlant(
+        loss_fn, cost_noise=sigma_c, write_noise=sigma_theta,
+        dtheta=dtheta, seed=device_seed, probe_fn=probe_fn,
+        meta=PlantMeta(name="mlp-noisy", cost_noise=sigma_c,
+                       write_noise=sigma_theta, sigma_a=sigma_a))
+
+
+def quantized_mlp_plant(sizes: Sequence[int], *, bits: int = 8,
+                        w_clip: float = 2.0, write_tau: float = 0.0,
+                        quantize_probes: bool = False, sigma_a: float = 0.0,
+                        device_seed: int = 0, cost=mse) -> QuantizedPlant:
+    """An MLP whose weight memory sits behind a ``bits``-bit DAC."""
+    loss_fn, probe_fn, _ = mlp_device_fns(
+        sizes, sigma_a=sigma_a, device_seed=device_seed, cost=cost)
+    return QuantizedPlant(
+        loss_fn, bits=bits, w_clip=w_clip, write_tau=write_tau,
+        quantize_probes=quantize_probes, probe_fn=probe_fn,
+        meta=PlantMeta(name=f"mlp-dac{bits}", weight_bits=bits,
+                       sigma_a=sigma_a))
+
+
+class SimulatedAnalogChip:
+    """Reference host device for ``ExternalPlant``: a sigmoidal network
+    with fabrication defects, noisy analog writes and noisy readout.
+
+    Nothing outside this class may see the defects or the internal
+    parameters — only ``set_params`` / ``measure_cost`` / the public
+    readouts, like a lab instrument.  Deliberately implemented in PURE
+    NUMPY: the instrument lives on the far side of the host-callback
+    boundary, and host callbacks that dispatch JAX ops can deadlock
+    against the in-flight XLA program that invoked them (two threads
+    feeding one CPU client).  Stateful and eager — writes mutate the
+    instrument, the noise stream is a live RNG the trainer cannot
+    replay.
+    """
+
+    def __init__(self, sizes: Sequence[int] = (49, 4, 4), *, seed: int = 0,
+                 sigma_a: float = 0.15, sigma_theta: float = 0.01,
+                 sigma_c: float = 1e-4):
+        rng = np.random.default_rng(seed)
+        # per-neuron logistic defects, one tuple (α, β, a0, b0) per layer
+        # (the numpy twin of core.noise.sample_defects — same model, the
+        # chip's own fabrication draw)
+        self._defects = [
+            (1.0 + sigma_a * rng.standard_normal(n),
+             1.0 + sigma_a * rng.standard_normal(n),
+             sigma_a * rng.standard_normal(n),
+             sigma_a * rng.standard_normal(n))
+            for n in sizes[1:]
+        ]
+        self._sigma_theta = sigma_theta
+        self._sigma_c = sigma_c
+        self._params = None
+        self._rng = np.random.default_rng(seed + 101)
+        self.writes = 0
+        self.meta = PlantMeta(name="sim-chip", cost_noise=sigma_c,
+                              write_noise=sigma_theta, sigma_a=sigma_a,
+                              external=True)
+
+    def set_params(self, params):
+        """Analog memory write — each write lands with noise."""
+        self.writes += 1
+        self._params = jax.tree_util.tree_map(
+            lambda w: (np.asarray(w, np.float32)
+                       + self._sigma_theta * self._rng.standard_normal(
+                           np.shape(w)).astype(np.float32)),
+            params)
+
+    def _forward(self, x):
+        h = np.asarray(x, np.float32)
+        for (a, b, a0, b0), layer in zip(self._defects, self._params):
+            z = h @ layer["w"]
+            if "b" in layer:
+                z = z + layer["b"]
+            h = a / (1.0 + np.exp(-b * (z - a0))) + b0
+        return h
+
+    def measure_cost(self, batch):
+        """Scalar cost readout (MSE) with measurement noise."""
+        err = self._forward(batch["x"]) - np.asarray(batch["y"], np.float32)
+        c = float(np.mean(err * err))
+        return c + self._sigma_c * float(self._rng.standard_normal())
+
+    def measure_accuracy(self, batch):
+        """Classification readout (evaluation harness only — the
+        optimizer never calls this)."""
+        pred = self._forward(batch["x"])
+        return float(np.mean(np.argmax(pred, -1)
+                             == np.argmax(np.asarray(batch["y"]), -1)))

@@ -1,0 +1,80 @@
+"""Chip-in-the-loop: a plant on the far side of a host boundary.
+
+``ExternalPlant`` wraps any host-side device object exposing the minimal
+lab-instrument API
+
+    device.set_params(params)          # persistent analog write
+    device.measure_cost(batch) -> float  # present input, read ONE scalar
+
+and turns it into a ``Plant`` the jitted MGD step can drive: every
+``read_cost`` lowers to an *ordered* ``io_callback`` (write θ̃-perturbed
+params → present batch → read cost), so the optimizer stays the same
+pure-JAX program whether the device is a JAX function, a subprocess, or
+a physical chip behind a serial link.  The optimizer never sees device
+internals — defects, write noise and readout noise all live in the host
+object (paper §4/§6: the regime where backprop-through-a-model breaks
+and model-free MGD does not).
+
+Ordered callbacks sequence the host I/O with program order but are not
+allowed inside ``lax.cond`` branches, so external plants run the one
+cond-free MGD step: ``MGDConfig(mode="central", tau_theta=1)`` without
+replay (forward mode's C₀ refresh and every windowed update are conds);
+``make_mgd_step`` enforces this.  Temporal integration windows belong in
+the host loop driving the chip, not inside the traced step.
+
+Host devices must be NUMPY-PURE: a callback that dispatches JAX ops can
+deadlock against the in-flight XLA program that invoked it (two threads
+feeding one CPU client) — see ``devices.SimulatedAnalogChip``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Plant, PlantMeta
+
+try:                                    # jax >= 0.4.9
+    from jax.experimental import io_callback as _io_callback
+except ImportError:                     # pragma: no cover - old jax
+    _io_callback = None
+
+
+class ExternalPlant(Plant):
+    """Host-callback boundary around an opaque device object."""
+
+    def __init__(self, device: Any, *, meta: Optional[PlantMeta] = None):
+        for attr in ("set_params", "measure_cost"):
+            if not callable(getattr(device, attr, None)):
+                raise TypeError(
+                    f"external device must expose {attr}(); got "
+                    f"{type(device).__name__}")
+        if _io_callback is None:        # pragma: no cover - old jax
+            raise RuntimeError("ExternalPlant needs jax.experimental."
+                               "io_callback (jax >= 0.4.9)")
+        self.device = device
+        self.meta = meta or PlantMeta(name="external", external=True)
+
+    def _host_read(self, params, batch):
+        self.device.set_params(params)
+        return np.float32(self.device.measure_cost(batch))
+
+    def read_cost(self, params, batch, *, step, tag: int = 0):
+        return _io_callback(
+            self._host_read, jax.ShapeDtypeStruct((), jnp.float32),
+            params, batch, ordered=True)
+
+    def _host_write(self, params):
+        self.device.set_params(params)
+        return np.int32(0)
+
+    def write_params(self, params, *, step, prev=None):
+        """Commit the post-update parameters to the chip.  The trainer's
+        belief (the returned value) stays its own: analog write noise on
+        the device is invisible by construction — exactly the open-loop
+        write the paper's chip-in-the-loop setup performs."""
+        _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
+                     params, ordered=True)
+        return params

@@ -1,0 +1,181 @@
+"""In-process hardware models: noisy and quantized plants.
+
+``NoisyPlant`` absorbs the imperfection logic the paper studies in §3.5
+(Figs 8–10) that used to be inlined across ``core/mgd.py`` (σ_C, σ_θ) and
+``core/noise.py`` (σ_a defects live in the device's loss/probe functions;
+see ``hardware.devices`` for per-device-seed samplers):
+
+* σ_C cost-readout noise — one gaussian per scalar read, keyed on
+  (device seed, step, tag).
+* σ_θ persistent-write noise — θ lands as θ + N(0, σ_θ·Δθ) per element,
+  keyed on (device seed + 77, leaf index, step).
+
+Both key derivations reproduce the historical ``MGDConfig.cost_noise`` /
+``update_noise`` paths of the DISCRETE driver bit-for-bit, so σ = 0 is
+bit-identical (f32) to ``IdealPlant`` and cfg-built Algorithm-1 plants
+replay old trajectories exactly.  The continuous driver's σ_C stream was
+re-keyed onto the same (seed, tag, step) scheme in this refactor — old
+``AnalogMGDConfig(cost_noise>0)`` runs draw a different (statistically
+identical) noise sequence; σ = 0 analog runs are unchanged.
+
+``QuantizedPlant`` expresses the scenario the paper motivates but the
+repo previously could not: persistent weight writes go through a
+limited-bit DAC (clip to ±w_clip, round to 2^bits − 1 levels) and an
+optional slow-write lag — each write only moves the stored value a
+fraction 1 − e^{−1/τ_w} toward the commanded target.  Probe
+perturbations bypass the DAC by default (the paper's picture of a
+dedicated perturbation line / LFSR at each synapse); set
+``quantize_probes=True`` to model probes that must also round-trip the
+DAC (Δθ below the LSB then becomes invisible and training stalls — see
+benchmarks/hardware_plants.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import IdealPlant, Plant, PlantMeta
+
+
+def _gauss_noise(seed, step, tag, shape=()):
+    """Standard-normal noise from a counter-based key — no threaded PRNG
+    state, so checkpoint/restart replays the identical hardware noise."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    key = jax.random.fold_in(key, step)
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+class NoisyPlant(Plant):
+    """Device with gaussian readout noise and noisy persistent writes."""
+
+    def __init__(self, loss_fn: Callable, *,
+                 cost_noise: float = 0.0,
+                 write_noise: float = 0.0,
+                 dtheta: float = 1e-3,
+                 seed: int = 0,
+                 probe_fn: Optional[Callable] = None,
+                 meta: Optional[PlantMeta] = None):
+        self.loss_fn = loss_fn
+        self.cost_noise = float(cost_noise)
+        self.write_noise = float(write_noise)
+        self.dtheta = float(dtheta)
+        self.seed = int(seed)
+        self.probe_fn = probe_fn
+        self.meta = meta or PlantMeta(
+            name="noisy", cost_noise=self.cost_noise,
+            write_noise=self.write_noise)
+
+    def _noisy(self, cost, step, tag):
+        if self.cost_noise:
+            cost = cost + self.cost_noise * _gauss_noise(self.seed, step, tag)
+        return cost
+
+    def read_cost(self, params, batch, *, step, tag: int = 0):
+        return self._noisy(self.loss_fn(params, batch), step, tag)
+
+    def write_params(self, params, *, step, prev=None):
+        if not self.write_noise:
+            return params
+        # σ_θ in units of Δθ (paper §3.5 / Fig. 9): each element lands as
+        # θ + N(0, σ_θ·Δθ), leaf keys counted from 1 (historical layout).
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = []
+        for i, x in enumerate(leaves, start=1):
+            k = jax.random.fold_in(jax.random.PRNGKey(self.seed + 77), i)
+            k = jax.random.fold_in(k, step)
+            out.append(x + self.write_noise * self.dtheta * jax.random.normal(
+                k, x.shape, jnp.float32).astype(x.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def apply_perturbed(self, params, batch, probe, *, step, tags):
+        costs = super().apply_perturbed(params, batch, probe,
+                                        step=step, tags=tags)
+        if self.cost_noise:
+            noise = jnp.stack([_gauss_noise(self.seed, step, t)
+                               for t in tags])
+            costs = costs + self.cost_noise * noise
+        return costs
+
+
+class QuantizedPlant(Plant):
+    """Device whose persistent weight memory sits behind a limited-bit DAC
+    with an optional first-order slow-write lag."""
+
+    def __init__(self, loss_fn: Callable, *,
+                 bits: int = 8,
+                 w_clip: float = 2.0,
+                 write_tau: float = 0.0,
+                 quantize_probes: bool = False,
+                 probe_fn: Optional[Callable] = None,
+                 meta: Optional[PlantMeta] = None):
+        if bits < 1:
+            raise ValueError(f"weight DAC needs >= 1 bit, got {bits}")
+        self.loss_fn = loss_fn
+        self.bits = int(bits)
+        self.w_clip = float(w_clip)
+        self.write_tau = float(write_tau)
+        self.quantize_probes = bool(quantize_probes)
+        self.probe_fn = probe_fn
+        self.meta = meta or PlantMeta(name=f"dac{bits}", weight_bits=self.bits)
+
+    @property
+    def lsb(self) -> float:
+        return 2.0 * self.w_clip / (2 ** self.bits - 1)
+
+    def _quantize_leaf(self, x):
+        scale = jnp.float32(self.lsb)
+        q = jnp.round((jnp.clip(x, -self.w_clip, self.w_clip)
+                       + self.w_clip) / scale)
+        return (q * scale - self.w_clip).astype(x.dtype)
+
+    def quantize(self, params):
+        return jax.tree_util.tree_map(self._quantize_leaf, params)
+
+    def write_params(self, params, *, step, prev=None):
+        target = params
+        if self.write_tau and prev is not None:
+            # slow write: the memory cell only slews a fraction of the
+            # commanded step per write event (first-order lag, τ_w in
+            # units of write events).
+            alpha = 1.0 - math.exp(-1.0 / self.write_tau)
+            target = jax.tree_util.tree_map(
+                lambda p, t: (p.astype(jnp.float32)
+                              + alpha * (t.astype(jnp.float32)
+                                         - p.astype(jnp.float32))
+                              ).astype(t.dtype),
+                prev, target)
+        return self.quantize(target)
+
+    def read_cost(self, params, batch, *, step, tag: int = 0):
+        if self.quantize_probes:
+            params = self.quantize(params)
+        return self.loss_fn(params, batch)
+
+    def apply_perturbed(self, params, batch, probe, *, step, tags):
+        # persistent params are already on the DAC grid (write_params);
+        # the probe line bypasses the DAC unless quantize_probes, which
+        # the fused kernels cannot express (θ̃ is generated in-kernel).
+        if self.quantize_probes:
+            raise NotImplementedError(
+                "quantize_probes=True has no fused kernel path")
+        return super().apply_perturbed(params, batch, probe,
+                                       step=step, tags=tags)
+
+
+def plant_from_config(loss_fn, cfg, *, probe_fn=None) -> Plant:
+    """The implicit device of an ``MGDConfig``: its historical
+    ``cost_noise``/``update_noise`` fields become a ``NoisyPlant`` with
+    the exact historical key derivation (σ = 0 → ``IdealPlant``)."""
+    if getattr(cfg, "cost_noise", 0.0) or getattr(cfg, "update_noise", 0.0):
+        return NoisyPlant(
+            loss_fn,
+            cost_noise=cfg.cost_noise,
+            write_noise=getattr(cfg, "update_noise", 0.0),
+            dtheta=cfg.dtheta,
+            seed=cfg.seed,
+            probe_fn=probe_fn,
+        )
+    return IdealPlant(loss_fn, probe_fn=probe_fn)

@@ -5,7 +5,11 @@ in benchmarks/ runs the two algorithms on identical models and data.  The
 MGD loop scans ``chunk`` iterations per device program (τ_x handled inside
 the scan via index-seeded samplers), checkpoints periodically, and resumes
 deterministically — the perturbation sequence is a pure function of the
-global step.
+global step and checkpoints carry the FULL optimizer state (G accumulator,
+momentum, replay window), so a resumed run is the uninterrupted run.  The
+MGD loop drives any ``repro.hardware.Plant`` (ideal/noisy/quantized
+devices; external chips need the un-scanned per-step driver — see
+``make_mgd_epoch``'s note).
 """
 from __future__ import annotations
 
@@ -29,8 +33,21 @@ class TrainResult:
     steps_done: int
 
 
+def _opt_buffers(state):
+    """The pytree-valued MGDState buffers (None entries vanish from the
+    flattened tree, so the structure is a pure function of the config)."""
+    return {"g": state.g, "replay_c": state.replay_c, "m": state.m}
+
+
+def _ckpt_tree(params, state):
+    """Checkpoint payload: params + the FULL optimizer state.  Dropping
+    G/momentum/replay buffers on resume would silently diverge a resumed
+    run from the uninterrupted one mid-τ_θ-window."""
+    return {"params": params, "opt": _opt_buffers(state)}
+
+
 def train_mgd(
-    loss_fn: Callable,
+    loss_fn: Optional[Callable],
     params,
     cfg: MGDConfig,
     sample_fn: Callable,          # sample_fn(sample_index) -> batch
@@ -44,18 +61,33 @@ def train_mgd(
     resume: bool = True,
     log: Optional[Callable] = print,
     probe_fn: Optional[Callable] = None,   # fused probe path (cfg.fused)
+    plant=None,                   # hardware.Plant device (None → implicit)
 ) -> TrainResult:
     """Run MGD for ``num_steps`` iterations (τ_p ticks)."""
     state = mgd_init(params, cfg)
     start_step = 0
     if checkpoint_dir and resume and ckpt.latest_step(checkpoint_dir) is not None:
-        params, extra, start_step = ckpt.restore(checkpoint_dir, params)
-        state = state._replace(step=jnp.asarray(start_step, jnp.int32),
-                               c0=jnp.asarray(extra.get("c0", 0.0)))
+        try:
+            tree, extra, start_step = ckpt.restore(
+                checkpoint_dir, _ckpt_tree(params, state))
+            params = tree["params"]
+            state = state._replace(g=tree["opt"]["g"],
+                                   replay_c=tree["opt"]["replay_c"],
+                                   m=tree["opt"]["m"])
+        except AssertionError:
+            # legacy params-only checkpoint (pre full-state format)
+            params, extra, start_step = ckpt.restore(checkpoint_dir, params)
+            if log:
+                log("[mgd] legacy checkpoint: optimizer buffers reset")
+        state = state._replace(
+            step=jnp.asarray(start_step, jnp.int32),
+            c0=jnp.asarray(extra.get("c0", 0.0), jnp.float32),
+            metric_cost=jnp.asarray(extra.get("metric_cost", 0.0),
+                                    jnp.float32))
         if log:
             log(f"[mgd] resumed from step {start_step}")
 
-    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn)
+    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
 
     def body(carry, _):
         p, s = carry
@@ -89,8 +121,9 @@ def train_mgd(
             log(f"[mgd] step {done}/{num_steps} {msg} "
                 f"({(time.time()-t0):.1f}s)")
         if checkpoint_dir and checkpoint_every and done % checkpoint_every == 0:
-            ckpt.save(checkpoint_dir, done, params,
+            ckpt.save(checkpoint_dir, done, _ckpt_tree(params, state),
                       extra={"c0": float(state.c0),
+                             "metric_cost": float(state.metric_cost),
                              "algo": "mgd", "seed": cfg.seed})
     return TrainResult(params, state, history, done)
 

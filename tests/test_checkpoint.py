@@ -57,6 +57,58 @@ def test_deterministic_resume(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+def test_full_state_resume_matches_uninterrupted(tmp_path):
+    """Resume must restore the FULL MGDState — gradient accumulator G and
+    momentum — not just step/C₀.  Checkpoint mid-τ_θ-window (step 10 with
+    τ_θ = 4 → two probes already accumulated, momentum warm) so a resume
+    that dropped the buffers would visibly diverge."""
+    from repro.training.train_loop import train_mgd
+
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = lambda i: {"x": x, "y": y}                     # noqa: E731
+    cfg = MGDConfig(dtheta=1e-2, eta=0.5, tau_theta=4, momentum=0.9,
+                    seed=2)
+    p0 = mlp_init(jax.random.PRNGKey(3), (2, 2, 1))
+
+    cont = train_mgd(loss_fn, p0, cfg, sample_fn, 40, chunk=10, log=None)
+
+    train_mgd(loss_fn, p0, cfg, sample_fn, 10, chunk=10, log=None,
+              checkpoint_dir=str(tmp_path), checkpoint_every=10)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    resumed = train_mgd(loss_fn, p0, cfg, sample_fn, 40, chunk=10,
+                        log=None, checkpoint_dir=str(tmp_path),
+                        checkpoint_every=0)
+    assert resumed.steps_done == 40
+
+    for a, b in zip(jax.tree_util.tree_leaves(cont.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    # the restored state buffers keep evolving identically too
+    for a, b in zip(jax.tree_util.tree_leaves(cont.state.g),
+                    jax.tree_util.tree_leaves(resumed.state.g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_legacy_params_only_checkpoint_still_resumes(tmp_path):
+    """Pre-full-state checkpoints (params-only leaf set) restore with a
+    buffer reset instead of crashing."""
+    from repro.training.train_loop import train_mgd
+
+    x, y = tasks.xor_dataset()
+    loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
+    sample_fn = lambda i: {"x": x, "y": y}                     # noqa: E731
+    cfg = MGDConfig(dtheta=1e-2, eta=0.5, tau_theta=4, seed=2)
+    p0 = mlp_init(jax.random.PRNGKey(3), (2, 2, 1))
+    ckpt.save(str(tmp_path), 8, p0, extra={"c0": 0.25})
+
+    logs = []
+    res = train_mgd(loss_fn, p0, cfg, sample_fn, 16, chunk=8,
+                    log=logs.append, checkpoint_dir=str(tmp_path))
+    assert res.steps_done == 16
+    assert any("legacy" in str(m) for m in logs)
+
+
 def test_retention_keeps_latest(tmp_path):
     params = {"w": jnp.ones(3)}
     for s in range(6):

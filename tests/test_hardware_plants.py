@@ -1,0 +1,286 @@
+"""Hardware plant abstraction: parity, composition, and device models.
+
+The load-bearing contracts:
+* ``IdealPlant`` / ``NoisyPlant(σ=0)`` are bit-identical (f32) to the
+  implicit in-process path for BOTH optimizer drivers (Algorithm 1
+  discrete, Algorithm 2 continuous) — the refactor moved the noise, not
+  the numerics.
+* ``MGDConfig(fused=True)`` reaches the Pallas kernels through
+  ``Plant.apply_perturbed`` and produces the same trajectory as handing
+  ``probe_fn`` to the optimizer directly.
+* ``ExternalPlant`` drives an opaque host device end-to-end with no
+  optimizer-side access to device internals.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalogMGDConfig, MGDConfig, analog_init,
+                        make_analog_step, make_mgd_step, mgd_init, mse)
+from repro.data import tasks
+from repro.hardware import (ExternalPlant, IdealPlant, NoisyPlant, Plant,
+                            PlantMeta, QuantizedPlant, SimulatedAnalogChip,
+                            noisy_mlp_plant, quantized_mlp_plant)
+from repro.models.simple import make_mlp_probe_fn, mlp_apply, mlp_init
+
+X, Y = tasks.xor_dataset()
+BATCH = {"x": X, "y": Y}
+
+
+def _loss(p, b):
+    return mse(mlp_apply(p, b["x"]), b["y"])
+
+
+def _params():
+    return mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+
+
+def _run_mgd(cfg, plant=None, steps=24, loss_fn=_loss, probe_fn=None):
+    p = _params()
+    step = jax.jit(make_mgd_step(loss_fn, cfg, probe_fn=probe_fn,
+                                 plant=plant))
+    s = mgd_init(p, cfg)
+    cts = []
+    for _ in range(steps):
+        p, s, m = step(p, s, BATCH)
+        cts.append(float(m["c_tilde"]))
+    return p, cts
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Parity: plants reproduce the in-process path bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["forward", "central"])
+@pytest.mark.parametrize("replay", [False, True])
+def test_ideal_and_sigma0_bit_identical_alg1(mode, replay):
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, mode=mode, replay=replay,
+                    tau_theta=4 if replay else 1, seed=3)
+    p_implicit, ct_implicit = _run_mgd(cfg)
+    p_ideal, ct_ideal = _run_mgd(cfg, plant=IdealPlant(_loss))
+    p_noisy0, ct_noisy0 = _run_mgd(cfg, plant=NoisyPlant(
+        _loss, cost_noise=0.0, write_noise=0.0, dtheta=cfg.dtheta,
+        seed=cfg.seed))
+    _assert_trees_equal(p_implicit, p_ideal)
+    _assert_trees_equal(p_implicit, p_noisy0)
+    assert ct_implicit == ct_ideal == ct_noisy0
+
+
+def test_ideal_and_sigma0_bit_identical_alg2():
+    cfg = AnalogMGDConfig(dtheta=1e-2, eta=1e-3, ptype="sinusoidal")
+    target = jnp.array([1.0, -2.0, 3.0])
+    loss = lambda p, b: jnp.sum((p["w"] - target) ** 2)    # noqa: E731
+    p0 = {"w": jnp.zeros(3)}
+
+    def run(plant):
+        step = jax.jit(make_analog_step(loss, cfg, plant=plant))
+        p, s = p0, analog_init(p0, cfg)
+        for _ in range(100):
+            p, s, _ = step(p, s, None)
+        return p
+
+    p_implicit = run(None)
+    _assert_trees_equal(p_implicit, run(IdealPlant(loss)))
+    _assert_trees_equal(p_implicit, run(NoisyPlant(
+        loss, cost_noise=0.0, dtheta=cfg.dtheta, seed=cfg.seed)))
+
+
+def test_cfg_noise_equals_explicit_noisy_plant():
+    """MGDConfig.cost_noise/update_noise are the implicit NoisyPlant —
+    the historical key derivation is preserved bit-for-bit."""
+    cfg_noise = MGDConfig(dtheta=1e-2, eta=1.0, cost_noise=1e-3,
+                          update_noise=0.01, seed=5)
+    cfg_clean = dataclasses.replace(cfg_noise, cost_noise=0.0,
+                                    update_noise=0.0)
+    p_cfg, ct_cfg = _run_mgd(cfg_noise)
+    p_plant, ct_plant = _run_mgd(cfg_clean, plant=NoisyPlant(
+        _loss, cost_noise=1e-3, write_noise=0.01, dtheta=1e-2, seed=5))
+    _assert_trees_equal(p_cfg, p_plant)
+    assert ct_cfg == ct_plant
+
+
+@pytest.mark.parametrize("mode", ["forward", "central"])
+def test_fused_through_plant_matches_direct_probe_fn(mode):
+    """cfg.fused reaches the kernels via Plant.apply_perturbed; handing
+    probe_fn to the optimizer or to the plant is the same trajectory."""
+    probe_fn = make_mlp_probe_fn()
+    # eta matches the PR-1 bit-equality contract configs (test_fused_probe):
+    # at eta=1.0 XLA folds (-eta)·e to a negation in one program only — a
+    # pre-existing one-ulp reassociation outside the pinned contract.
+    cfg = MGDConfig(dtheta=1e-2, eta=0.5, mode=mode, fused=True, seed=2,
+                    kernel_impl="interpret")
+    p_direct, ct_direct = _run_mgd(cfg, probe_fn=probe_fn)
+    p_plant, ct_plant = _run_mgd(
+        cfg, plant=IdealPlant(_loss, probe_fn=probe_fn))
+    _assert_trees_equal(p_direct, p_plant)
+    assert ct_direct == ct_plant
+
+    # and the fused trajectory equals the materializing one (the PR-1
+    # contract, now routed through the plant)
+    p_mat, ct_mat = _run_mgd(dataclasses.replace(cfg, fused=False))
+    _assert_trees_equal(p_plant, p_mat)
+    assert ct_plant == ct_mat
+
+
+def test_probe_parallel_accepts_plant():
+    from jax.sharding import Mesh
+    from repro.core.probe_parallel import make_probe_parallel_step
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, mode="central", seed=1)
+    p0 = _params()
+    batch = {"x": X[None], "y": Y[None]}      # [pods, ...] shard layout
+    step_a = make_probe_parallel_step(_loss, cfg, mesh)
+    step_b = make_probe_parallel_step(None, cfg, mesh,
+                                      plant=IdealPlant(_loss))
+    pa, _ = step_a(p0, 0, batch)
+    pb, _ = step_b(p0, 0, batch)
+    _assert_trees_equal(pa, pb)
+
+
+# ---------------------------------------------------------------------------
+# Composition / validation
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_plant_rejects_cfg_noise():
+    cfg = MGDConfig(cost_noise=0.1)
+    with pytest.raises(ValueError, match="explicit plant"):
+        make_mgd_step(_loss, cfg, plant=IdealPlant(_loss))
+
+
+def test_plant_type_checked():
+    with pytest.raises(TypeError):
+        make_mgd_step(_loss, MGDConfig(), plant=object())
+
+
+def test_loss_fn_optional_only_with_plant():
+    with pytest.raises(ValueError):
+        make_mgd_step(None, MGDConfig())
+    make_mgd_step(None, MGDConfig(), plant=IdealPlant(_loss))  # fine
+
+
+def test_external_requires_cond_free_step():
+    """Ordered host callbacks can only ride the central τ_θ=1 step."""
+    plant = ExternalPlant(SimulatedAnalogChip((2, 2, 1)))
+    for bad in (MGDConfig(mode="forward"),
+                MGDConfig(mode="central", tau_theta=4),
+                MGDConfig(mode="central", tau_theta=4, replay=True)):
+        with pytest.raises(ValueError, match="external plants"):
+            make_mgd_step(None, bad, plant=plant)
+
+
+def test_shared_plant_not_mutated_by_probe_fn():
+    """Handing probe_fn to make_mgd_step must not stick it onto a plant
+    shared with another optimizer (and conflicting probe_fns error)."""
+    plant = IdealPlant(_loss)
+    pf = make_mlp_probe_fn()
+    make_mgd_step(None, MGDConfig(fused=True), probe_fn=pf, plant=plant)
+    assert plant.probe_fn is None
+    plant2 = IdealPlant(_loss, probe_fn=pf)
+    with pytest.raises(ValueError, match="probe_fn"):
+        make_mgd_step(None, MGDConfig(), probe_fn=make_mlp_probe_fn(),
+                      plant=plant2)
+
+
+def test_noisy_write_noise_perturbs_updates():
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=3)
+    p_clean, _ = _run_mgd(cfg, plant=IdealPlant(_loss), steps=4)
+    p_noisy, _ = _run_mgd(cfg, plant=NoisyPlant(
+        _loss, write_noise=0.5, dtheta=1e-2, seed=3), steps=4)
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree_util.tree_leaves(p_clean),
+                             jax.tree_util.tree_leaves(p_noisy))]
+    assert max(diffs) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# QuantizedPlant: DAC writes, slow-write lag
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_writes_land_on_dac_grid():
+    plant = QuantizedPlant(_loss, bits=6, w_clip=2.0)
+    p = plant.write_params(_params(), step=0)
+    lsb = plant.lsb
+    for leaf in jax.tree_util.tree_leaves(p):
+        codes = (np.asarray(leaf) + 2.0) / lsb
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_quantized_high_bits_tracks_ideal():
+    """A 14-bit DAC (LSB ≈ 2.4e-4) barely perturbs a Δθ = 1e-2 run."""
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=3)
+    p_ideal, _ = _run_mgd(cfg, plant=IdealPlant(_loss), steps=40)
+    p_q, _ = _run_mgd(cfg, plant=QuantizedPlant(_loss, bits=14), steps=40)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ideal),
+                    jax.tree_util.tree_leaves(p_q)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
+
+
+def test_slow_write_lags_commanded_target():
+    plant = QuantizedPlant(_loss, bits=12, write_tau=4.0)
+    prev = {"w": jnp.zeros(3)}
+    target = {"w": jnp.ones(3)}
+    landed = plant.write_params(target, step=0, prev=prev)
+    frac = float(landed["w"][0])
+    # one write event moves 1 − e^{−1/τ} ≈ 0.221 of the way
+    assert 0.15 < frac < 0.3, frac
+
+
+def test_sub_lsb_probes_invisible_when_probes_quantized():
+    """Δθ below the DAC LSB: a probe that must round-trip the DAC reads
+    C̃ = 0 — the scenario the paper motivates (quantization floors the
+    trainable Δθ)."""
+    plant = QuantizedPlant(_loss, bits=4, quantize_probes=True)
+    assert plant.lsb > 4e-2
+    cfg = MGDConfig(dtheta=1e-3, eta=1.0, mode="central", seed=0)
+    p0 = plant.write_params(_params(), step=0)
+    step = jax.jit(make_mgd_step(None, cfg, plant=plant))
+    s = mgd_init(p0, cfg)
+    _, _, m = step(p0, s, BATCH)
+    assert float(m["c_tilde"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ExternalPlant: chip in the loop
+# ---------------------------------------------------------------------------
+
+
+def test_external_plant_trains_through_opaque_interface():
+    chip = SimulatedAnalogChip((2, 2, 1), seed=0, sigma_a=0.1,
+                               sigma_theta=0.005, sigma_c=1e-4)
+    plant = ExternalPlant(chip)
+    cfg = MGDConfig(dtheta=2e-2, eta=0.5, mode="central", seed=0)
+    p = _params()
+    s = mgd_init(p, cfg)
+    step = jax.jit(make_mgd_step(None, cfg, plant=plant))
+    costs = []
+    for _ in range(60):
+        p, s, m = step(p, s, BATCH)
+        costs.append(float(m["cost"]))
+    assert np.isfinite(costs).all()
+    # 2 probe writes + 1 update write per step went to the instrument
+    assert chip.writes == 3 * 60
+    # the trainer moved the needle on the *chip's* cost readout
+    assert np.mean(costs[-10:]) < np.mean(costs[:10])
+
+
+def test_external_plant_rejects_non_device():
+    with pytest.raises(TypeError, match="set_params"):
+        ExternalPlant(object())
+
+
+def test_plant_meta_latency_projection():
+    meta = PlantMeta(name="hw1", read_latency_s=1e-3, write_latency_s=1e-4)
+    assert meta.step_latency_s(reads_per_step=2, writes_per_step=1) == \
+        pytest.approx(2.1e-3)

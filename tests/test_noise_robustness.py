@@ -15,8 +15,15 @@ from repro.models.simple import mlp_apply, mlp_init
 
 
 def _xor_run(cfg, steps=30000, seeds=(1, 2, 3)):
-    """Median final cost over param seeds (XOR has stuck inits; the paper
-    reports medians over 100–1000 inits)."""
+    """Median final cost over param seeds.
+
+    Tolerance rationale: XOR has stuck inits (sigmoid-saturation
+    plateaus at cost 0.125) and whether a seed escapes within budget is
+    threshold-sensitive; the paper reports medians over 100–1000 inits
+    for this reason (§3.1).  Three seeds with a median assert is the
+    cheapest flake-resistant version: one stuck init cannot fail the
+    test, and one lucky init cannot pass the expected-divergence
+    cases."""
     x, y = tasks.xor_dataset()
     loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
     finals = []
@@ -40,9 +47,15 @@ def test_cost_noise_below_threshold_still_trains():
 
 
 def test_large_cost_noise_breaks_training():
-    """Fig. 8a's other end: cost noise ≫ perturbation response stalls it."""
+    """Fig. 8a's other end: cost noise ≫ perturbation response stalls it.
+
+    Expected-divergence tolerance: σ_C = 1.0 is ~1000× the C̃ response
+    (≈ |g|·Δθ ≈ 1e-3), so the error signal is pure noise and the MEDIAN
+    seed must sit far above the 0.04 solved threshold — a single seed
+    random-walking below it would be a false pass, which the median over
+    (1, 2, 3, 5) absorbs."""
     very_noisy = MGDConfig(dtheta=1e-2, eta=1.0, seed=4, cost_noise=1.0)
-    assert _xor_run(very_noisy, steps=20000) > 0.04
+    assert _xor_run(very_noisy, steps=20000, seeds=(1, 2, 3, 5)) > 0.04
 
 
 def test_update_noise_tolerated():
