@@ -1,28 +1,34 @@
-"""Shared benchmark helpers: scan-driven MGD training with early stopping."""
+"""Shared benchmark helpers: driver-based MGD training with early stopping.
+
+Every benchmark constructs its algorithm through ``repro.driver`` — the
+one registry call — so the same helper drives discrete, analog, and
+probe-parallel configs against any hardware plant.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.api import driver as build_driver, make_epoch
+from repro.core import MGDConfig, mse
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler
 from repro.models.simple import mlp_apply, mlp_init
 
 
-def train_until(loss_fn, params, cfg: MGDConfig, sample_fn, *,
+def train_until(loss_fn, params, cfg, sample_fn, *,
                 max_steps: int, threshold_fn: Callable,
-                chunk: int = 2000, plant=None):
-    """Run MGD in jitted chunks until threshold_fn(params) or budget.
-    ``plant`` optionally trains against an explicit hardware device.
+                chunk: int = 2000, plant=None, algorithm: str = "discrete"):
+    """Run an MGD driver in jitted chunks until threshold_fn(params) or
+    budget.  ``plant`` optionally trains against an explicit hardware
+    device; ``cfg`` is a DriverConfig or the algorithm's legacy config.
 
     Returns (params, steps_used, solved).
     """
-    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn, plant=plant)
-    state = mgd_init(params, cfg)
+    drv = build_driver(algorithm, cfg, loss_fn, plant=plant)
+    run = make_epoch(drv, chunk, sample_fn)
+    state = drv.init(params)
     steps = 0
     while steps < max_steps:
         params, state, _ = run(params, state)

@@ -7,9 +7,9 @@ short-τ_θ data-efficiency/time tradeoff.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.api import DriverConfig, driver, make_epoch
+from repro.core import mse
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler
 from repro.models.simple import mlp_apply, mlp_init
@@ -25,14 +25,13 @@ def _mgd_curve(tau, seed, iters=40000, chunk=2000):
     # τ_θ = τ_x = tau: each sample integrated tau steps (batch size 1).
     # G accumulates ∝ τ_θ, so η·τ_θ is held ≈ constant across the sweep
     # (the paper's Fig. 6b max-η ∝ 1/τ_θ observation).
-    cfg = MGDConfig(dtheta=1e-2, eta=1.0 / tau if tau > 1 else 1.0,
-                    tau_theta=tau, tau_x=tau, seed=seed)
-    run = make_mgd_epoch(loss_fn, cfg, chunk, dataset_sampler(x, y, 1))
-    state = mgd_init(params, cfg)
-    curve = []
-    for i in range(iters // chunk):
+    cfg = DriverConfig(dtheta=1e-2, eta=1.0 / tau if tau > 1 else 1.0,
+                       tau_theta=tau, tau_x=tau, seed=seed)
+    mgd = driver("discrete", cfg, loss_fn)
+    run = make_epoch(mgd, chunk, dataset_sampler(x, y, 1))
+    state = mgd.init(params)
+    for _ in range(iters // chunk):
         params, state, _ = run(params, state)
-        curve.append((i + 1) * chunk, )
     return float(mse(mlp_apply(params, x), y))
 
 

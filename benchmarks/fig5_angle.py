@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init, mse
+from repro.api import DriverConfig, driver
+from repro.core import mse
 from repro.core.forward_grad import gradient_angle, true_gradient
 from repro.data import tasks
 from repro.models.simple import mlp_apply, mlp_init
@@ -19,9 +20,10 @@ def _angles(sizes, batch, seeds=N_SEEDS, iters=max(CHECKPOINTS)):
     out = {t: [] for t in CHECKPOINTS}
     for seed in range(seeds):
         params = mlp_init(jax.random.PRNGKey(seed), sizes)
-        cfg = MGDConfig(dtheta=1e-3, eta=0.0, tau_theta=10**9, seed=seed)
-        state = mgd_init(params, cfg)
-        step = jax.jit(make_mgd_step(loss_fn, cfg))
+        cfg = DriverConfig(dtheta=1e-3, eta=0.0, tau_theta=10**9, seed=seed)
+        mgd = driver("discrete", cfg, loss_fn)
+        state = mgd.init(params)
+        step = jax.jit(mgd.step)
         g_true = true_gradient(loss_fn, params, batch)
         p = params
         for t in range(1, iters + 1):

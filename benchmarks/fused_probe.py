@@ -19,7 +19,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.api import DriverConfig, driver, make_epoch
+from repro.core import mse
 from repro.core.utils import tree_size
 from repro.models.simple import make_mlp_probe_fn, mlp_apply, mlp_init
 
@@ -73,12 +74,13 @@ def _bench_mlp(mode, fused):
         sizes[-1])
     batch = {"x": x, "y": y}
     loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])  # noqa: E731
-    cfg = MGDConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
-                    kernel_impl=None if jax.default_backend() == "tpu"
-                    else "interpret")
-    run = make_mgd_epoch(loss_fn, cfg, CHUNK, lambda i: batch,
-                         probe_fn=make_mlp_probe_fn() if fused else None)
-    sps = _timed_run(run, params, mgd_init(params, cfg), STEPS)
+    cfg = DriverConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
+                       kernel_impl=None if jax.default_backend() == "tpu"
+                       else "interpret")
+    mgd = driver("discrete", cfg, loss_fn,
+                 probe_fn=make_mlp_probe_fn() if fused else None)
+    run = make_epoch(mgd, CHUNK, lambda i: batch)
+    sps = _timed_run(run, params, mgd.init(params), STEPS)
     return params, sps
 
 
@@ -90,13 +92,14 @@ def _bench_transformer(mode, fused):
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_a.vocab)
     batch = {"tokens": toks, "labels": toks}
     loss_fn = lambda p, b: model_loss(p, cfg_a, b)  # noqa: E731
-    cfg = MGDConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
-                    kernel_impl=None if jax.default_backend() == "tpu"
-                    else "interpret")
-    run = make_mgd_epoch(loss_fn, cfg, CHUNK, lambda i: batch,
-                         probe_fn=(make_transformer_probe_fn(cfg_a)
-                                   if fused else None))
-    sps = _timed_run(run, params, mgd_init(params, cfg), STEPS)
+    cfg = DriverConfig(mode=mode, dtheta=1e-3, eta=1e-2, fused=fused,
+                       kernel_impl=None if jax.default_backend() == "tpu"
+                       else "interpret")
+    mgd = driver("discrete", cfg, loss_fn,
+                 probe_fn=(make_transformer_probe_fn(cfg_a)
+                           if fused else None))
+    run = make_epoch(mgd, CHUNK, lambda i: batch)
+    sps = _timed_run(run, params, mgd.init(params), STEPS)
     return params, sps
 
 

@@ -1,17 +1,17 @@
 """Hardware-plant robustness curves (EXPERIMENTS.md §Hardware).
 
-One optimizer, many devices: the same ``MGDConfig`` drives IdealPlant,
-NoisyPlant (σ_C / σ_θ / σ_a), and QuantizedPlant (k-bit DAC, slow-write
-τ_w) on xor and nist7x7 — the scenario matrix the plant interface
-unlocks.  Also projects wall-clock per-step cost from ``PlantMeta``
-latency metadata (Table-3 style).
+One optimizer, many devices: the same driver config drives IdealPlant,
+NoisyPlant (σ_C / σ_θ / σ_a), and QuantizedPlant (k-bit DAC writes,
+slow-write τ_w, k-bit ADC cost readout) on xor and nist7x7 — the
+scenario matrix the plant interface unlocks.  Also projects wall-clock
+per-step cost from ``PlantMeta`` latency metadata (Table-3 style).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init
+from repro.api import DriverConfig, driver, make_epoch
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler, generator_sampler
 from repro.hardware import (PlantMeta, mlp_device_fns, noisy_mlp_plant,
@@ -37,14 +37,18 @@ XOR_DACS = [("dac10", dict(bits=10, w_clip=8.0)),
             ("dac8_tauw4", dict(bits=8, w_clip=8.0, write_tau=4.0))]
 
 
-def _xor_row(name, plant_fn, detail):
+def _xor_row(name, plant_fn, detail, seed0=0, mode="forward"):
     """Steps to solve xor ON THE DEVICE: the solved threshold reads the
-    plant's own cost (defects included) — the optimizer's actual target,
-    not a defect-free twin's."""
-    cfg = MGDConfig(dtheta=1e-2, eta=1.0)
+    plant's loss_fn (defects included) — the optimizer's actual target,
+    not a defect-free twin's.  Deliberately PRE-readout-conversion: for
+    ADC devices the converter quantizes the training feedback, but
+    judging 'solved' on the quantized readout would be undecidable below
+    one LSB — the experimenter's bench meter, not the chip's own ADC,
+    decides whether training through the ADC found a solution."""
+    cfg = DriverConfig(dtheta=1e-2, eta=1.0, mode=mode)
     x, y = tasks.xor_dataset()
     times = []
-    for s in range(N_SEEDS):
+    for s in range(seed0, seed0 + N_SEEDS):
         plant = plant_fn(s)
         params = mlp_init(jax.random.PRNGKey(s), (2, 2, 1))
 
@@ -67,10 +71,11 @@ def _nist_accuracy(plant, defects, seed, steps=30000, chunk=6000):
     """49-4-4 nist7x7 through ``plant``; accuracy read on the device
     (its defects included) over a fixed eval batch."""
     params = mlp_init(jax.random.PRNGKey(seed), (49, 4, 4))
-    cfg = MGDConfig(dtheta=1e-2, eta=0.1, seed=seed)
+    cfg = DriverConfig(dtheta=1e-2, eta=0.1, seed=seed)
     sample_fn = generator_sampler(tasks.nist7x7_batch, 8, seed=11 + seed)
-    run = make_mgd_epoch(None, cfg, chunk, sample_fn, plant=plant)
-    state = mgd_init(params, cfg)
+    mgd = driver("discrete", cfg, None, plant=plant)
+    run = make_epoch(mgd, chunk, sample_fn)
+    state = mgd.init(params)
     for _ in range(steps // chunk):
         params, state, _ = run(params, state)
     xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
@@ -79,20 +84,48 @@ def _nist_accuracy(plant, defects, seed, steps=30000, chunk=6000):
                            == jnp.argmax(ye, -1)).astype(jnp.float32)))
 
 
-def run():
+# Mixed-precision READOUT (the DAC's dual): xor cost lives in [0, ~0.3]
+# on a unit-range ADC, and the central-mode signal is |C̃| ≈ |g|·Δθ ≈
+# 4e-3 at Δθ = 1e-2 — so the 8-bit LSB (3.9e-3) is the last depth where
+# the error signal clears one code.  Measured (EXPERIMENTS.md §Hardware):
+# ≥8 bits solves in either rounding mode, ≤7 bits solves in neither —
+# deterministic rounding floors C̃ (quantization), stochastic rounding
+# trades the bias for LSB-scale readout variance (≈ σ_C = LSB/√12,
+# which at 7 bits sits in the σ_C ≈ 1e-2 failure band of fig8).  The
+# paper Fig. 8 noise cliff, mapped onto ADC bits.
+XOR_ADCS = [("adc12_round", dict(bits=12, w_clip=8.0, adc_bits=12)),
+            ("adc10_round", dict(bits=12, w_clip=8.0, adc_bits=10)),
+            ("adc8_round", dict(bits=12, w_clip=8.0, adc_bits=8)),
+            ("adc8_stoch", dict(bits=12, w_clip=8.0, adc_bits=8,
+                                adc_mode="stochastic")),
+            ("adc7_round", dict(bits=12, w_clip=8.0, adc_bits=7)),
+            ("adc7_stoch", dict(bits=12, w_clip=8.0, adc_bits=7,
+                                adc_mode="stochastic")),
+            ("adc6_round", dict(bits=12, w_clip=8.0, adc_bits=6)),
+            ("adc6_stoch", dict(bits=12, w_clip=8.0, adc_bits=6,
+                                adc_mode="stochastic"))]
+
+
+def run(seed: int = 0):
     rows = []
     for name, kw in XOR_PLANTS:
         rows.append(_xor_row(
             name,
             lambda s, kw=kw: noisy_mlp_plant((2, 2, 1), dtheta=1e-2,
                                              device_seed=s, **kw),
-            f"NoisyPlant {kw or 'σ=0'}"))
+            f"NoisyPlant {kw or 'σ=0'}", seed0=seed))
     for name, kw in XOR_DACS:
         rows.append(_xor_row(
             name,
             lambda s, kw=kw: quantized_mlp_plant((2, 2, 1), device_seed=s,
                                                  **kw),
-            f"QuantizedPlant {kw}"))
+            f"QuantizedPlant {kw}", seed0=seed))
+    for name, kw in XOR_ADCS:
+        rows.append(_xor_row(
+            name,
+            lambda s, kw=kw: quantized_mlp_plant((2, 2, 1), device_seed=s,
+                                                 **kw),
+            f"QuantizedPlant {kw}", seed0=seed, mode="central"))
 
     # nist7x7: ideal vs full §3.5 device vs 8-bit DAC device
     nist_devices = [
@@ -103,17 +136,17 @@ def run():
     ]
     for name, noisy_kw, dac_kw in nist_devices:
         accs = []
-        for seed in range(N_SEEDS):
+        for dev in range(seed, seed + N_SEEDS):
             sigma_a = noisy_kw.get("sigma_a", 0.0)
             _, _, defects = mlp_device_fns((49, 4, 4), sigma_a=sigma_a,
-                                           device_seed=seed)
+                                           device_seed=dev)
             if dac_kw:
-                plant = quantized_mlp_plant((49, 4, 4), device_seed=seed,
+                plant = quantized_mlp_plant((49, 4, 4), device_seed=dev,
                                             **dac_kw)
             else:
                 plant = noisy_mlp_plant((49, 4, 4), dtheta=1e-2,
-                                        device_seed=seed, **noisy_kw)
-            accs.append(_nist_accuracy(plant, defects, seed))
+                                        device_seed=dev, **noisy_kw)
+            accs.append(_nist_accuracy(plant, defects, dev))
         rows.append({
             "bench": "hw_plants", "name": f"nist7x7_{name}_accuracy",
             "value": median(accs),

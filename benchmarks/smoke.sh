@@ -1,11 +1,14 @@
 #!/usr/bin/env sh
-# CI-style smoke: kernel correctness + fused-probe path + one bench config,
-# all on the CPU/interpret backend.  Run from the repo root:
+# CI-style smoke: kernel correctness + driver-API parity + fused-probe path
+# + one bench config, all on the CPU/interpret backend.  Run from the repo
+# root:
 #   sh benchmarks/smoke.sh
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py
-python -m benchmarks.run --only fused_probe --out artifacts/bench
+python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
+    tests/test_driver_api.py
+python -m benchmarks.run --list
+python -m benchmarks.run --only fused_probe --seed 0 --out artifacts/bench
 echo "smoke OK"

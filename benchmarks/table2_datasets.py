@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.api import driver, make_epoch
+from repro.core import MGDConfig, mse
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler, generator_sampler
 from repro.models.simple import (cifar_cnn_apply, cifar_cnn_init,
@@ -37,8 +38,9 @@ def _mse_loss(apply_fn):
 
 
 def _train_mgd(loss_fn, params, cfg, sample_fn, steps, chunk):
-    run = make_mgd_epoch(loss_fn, cfg, chunk, sample_fn)
-    state = mgd_init(params, cfg)
+    mgd = driver("discrete", cfg, loss_fn)
+    run = make_epoch(mgd, chunk, sample_fn)
+    state = mgd.init(params)
     for _ in range(max(1, steps // chunk)):
         params, state, _ = run(params, state)
     return params

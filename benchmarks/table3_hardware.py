@@ -13,7 +13,7 @@ import time
 
 import jax
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+from repro.core import mse
 from repro.data import tasks
 from repro.data.pipeline import dataset_sampler, generator_sampler
 from repro.hardware import PlantMeta

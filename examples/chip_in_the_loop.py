@@ -7,10 +7,10 @@ noise (σ_θ) and cost-readout noise (σ_C) that the trainer never models —
 exactly the regime where backprop-through-a-model fails (the paper cites
 a 97.6% → 63.9% accuracy drop on transfer) and model-free MGD shines.
 
-Since PR 2 the trainer side is the SAME ``make_mgd_step`` that drives
-every in-process device: ``ExternalPlant`` lowers each cost read to an
-ordered host callback (set_params → present batch → measure_cost), so
-the optimizer has no access to device internals at all — swap the
+The trainer side is the SAME ``repro.driver("discrete", ...)`` that
+drives every in-process device: ``ExternalPlant`` lowers each cost read
+to an ordered host callback (set_params → present batch → measure_cost),
+so the optimizer has no access to device internals at all — swap the
 ``SimulatedAnalogChip`` for a serial-port driver with the same two
 methods and nothing else changes.
 
@@ -18,7 +18,7 @@ methods and nothing else changes.
 """
 import jax
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init
+import repro
 from repro.data.tasks import nist7x7_batch
 from repro.hardware import ExternalPlant, SimulatedAnalogChip
 from repro.models.simple import mlp_init
@@ -33,10 +33,11 @@ def main():
     params = mlp_init(jax.random.PRNGKey(1), (49, 4, 4))
     # central mode: the external plant's ordered host callbacks need the
     # cond-free step (forward mode's C₀ refresh is a lax.cond).
-    cfg = MGDConfig(dtheta=2e-2, eta=0.1, tau_theta=1, mode="central",
-                    seed=0)
-    state = mgd_init(params, cfg)
-    step_fn = jax.jit(make_mgd_step(None, cfg, plant=plant))
+    cfg = repro.DriverConfig(dtheta=2e-2, eta=0.1, tau_theta=1,
+                             mode="central", seed=0)
+    mgd = repro.driver("discrete", cfg, plant=plant)
+    state = mgd.init(params)
+    step_fn = jax.jit(mgd.step)
 
     key = jax.random.PRNGKey(7)
     for it in range(4001):

@@ -4,11 +4,21 @@
 
 The entire interface between MGD and the model is ONE scalar-valued
 function ``loss_fn(params, batch)`` — no gradients, no model structure.
+Every algorithm is built the same way through the driver registry:
+
+    mgd = repro.driver("discrete" | "analog" | "probe_parallel", cfg,
+                       loss_fn, plant=..., probe_fn=..., mesh=...)
+    state = mgd.init(params)
+    params, state, aux = mgd.step(params, state, batch)
+
+``aux`` always carries ``cost``, ``c_tilde`` (the one-scalar feedback)
+and ``grad_norm_proxy``; ``repro.make_epoch`` scans many steps into one
+jitted call.
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_epoch, mgd_init, mse
+import repro
+from repro.core import mse
 from repro.data.pipeline import dataset_sampler
 from repro.data.tasks import xor_dataset
 from repro.models.simple import mlp_apply, mlp_init
@@ -22,15 +32,16 @@ def main():
         return mse(mlp_apply(p, batch["x"]), batch["y"])
 
     # τ_p = τ_θ = τ_x = 1 with ±Δθ Rademacher codes == SPSA (paper Fig. 2c)
-    cfg = MGDConfig(ptype="rademacher", dtheta=1e-2, eta=1.0,
-                    tau_p=1, tau_theta=1, tau_x=1, seed=0)
-    run = make_mgd_epoch(loss_fn, cfg, steps_per_call=2000,
-                         sample_fn=dataset_sampler(x, y, 1))
-    state = mgd_init(params, cfg)
+    cfg = repro.DriverConfig(ptype="rademacher", dtheta=1e-2, eta=1.0,
+                             tau_theta=1, tau_x=1, seed=0)
+    mgd = repro.driver("discrete", cfg, loss_fn)
+    run = repro.make_epoch(mgd, 2000, dataset_sampler(x, y, 1))
+    state = mgd.init(params)
     for epoch in range(10):
-        params, state, metrics = run(params, state)
+        params, state, aux = run(params, state)
         cost = float(mse(mlp_apply(params, x), y))
-        print(f"iteration {2000 * (epoch + 1):6d}: dataset cost {cost:.4f}")
+        print(f"iteration {2000 * (epoch + 1):6d}: dataset cost {cost:.4f} "
+              f"(|grad| proxy {float(aux['grad_norm_proxy'][-1]):.3g})")
         if cost < 0.04:
             print("solved (paper threshold 0.04)")
             break

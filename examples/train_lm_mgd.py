@@ -13,8 +13,8 @@ import argparse
 
 import jax
 
+from repro.api import DriverConfig
 from repro.configs import get_smoke_config
-from repro.core import MGDConfig
 from repro.data.pipeline import lm_sampler
 from repro.models import model_init, model_loss
 from repro.training.train_loop import train_mgd
@@ -47,9 +47,9 @@ def main():
           f"{args.probes}-probe central MGD")
 
     # probe-averaged central MGD: the at-scale configuration (on a pod the
-    # probes map onto the "pod" mesh axis — core/probe_parallel.py)
-    mgd_cfg = MGDConfig(mode="central", dtheta=1e-3, eta=2e-3,
-                        probes=args.probes, seed=0)
+    # probes map onto the "pod" mesh axis — repro.driver("probe_parallel"))
+    mgd_cfg = DriverConfig(mode="central", dtheta=1e-3, eta=2e-3,
+                           probes=args.probes, seed=0)
     loss_fn = lambda p, b: model_loss(p, cfg, b)       # noqa: E731
     sample_fn = lm_sampler(args.batch, args.seq, cfg.vocab, seed=1)
     res = train_mgd(loss_fn, params, mgd_cfg, sample_fn, args.steps,

@@ -1,0 +1,30 @@
+"""repro — multiplexed gradient descent, reproduced and scaled.
+
+The package front door is the driver registry:
+
+    import repro
+    mgd = repro.driver("discrete", repro.DriverConfig(dtheta=1e-2, eta=1.0),
+                       loss_fn)
+    state = mgd.init(params)
+    params, state, aux = mgd.step(params, state, batch)
+
+Attributes resolve lazily so ``import repro`` stays free of jax imports
+until the API is actually used (subpackages import directly as before).
+"""
+_API_NAMES = (
+    "ALGORITHMS", "DriverConfig", "MGDDriver", "ProbeParallelState",
+    "driver", "make_epoch", "register_driver", "replace_step", "state_step",
+)
+
+__all__ = list(_API_NAMES)
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,10 @@
+"""Public driver API — ``repro.driver()`` and the uniform MGD contract."""
+from .driver import (ALGORITHMS, DriverConfig, MGDDriver, ProbeParallelState,
+                     as_analog_config, as_mgd_config, driver, make_epoch,
+                     register_driver, replace_step, state_step)
+
+__all__ = [
+    "ALGORITHMS", "DriverConfig", "MGDDriver", "ProbeParallelState",
+    "as_analog_config", "as_mgd_config", "driver", "make_epoch",
+    "register_driver", "replace_step", "state_step",
+]

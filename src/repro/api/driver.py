@@ -1,0 +1,414 @@
+"""One driver API: ``repro.driver()`` builds every MGD algorithm.
+
+The paper's central claim is that MGD is *one* framework whose time
+constants (τ_p, τ_θ, τ_x) interpolate between the discrete Algorithm 1,
+the continuous Algorithm 2, and multi-probe variants.  This module makes
+the code say the same thing: every algorithm is constructed through one
+registry call and driven through one optax-style ``(init, step)`` pair —
+
+    mgd = repro.driver("discrete", DriverConfig(dtheta=1e-2, eta=1.0),
+                       loss_fn, plant=my_plant)
+    state = mgd.init(params)
+    params, state, aux = mgd.step(params, state, batch)
+
+``MGDDriver`` is a NamedTuple (jit/closure friendly) with
+
+* ``init(params) -> state``      — fresh algorithm state for ``params``
+* ``step(params, state, batch) -> (params, state, aux)``
+
+and a standardized ``aux`` dict that every algorithm emits:
+
+* ``cost``            — the device's cost readout this step (telemetry)
+* ``c_tilde``         — the scalar error signal C̃ (the ONLY feedback)
+* ``grad_norm_proxy`` — |C̃|/Δθ, the per-element magnitude of the
+  homodyne error signal e = C̃·θ̃/Δθ² (each |θ̃ᵢ| = Δθ); a cheap online
+  stand-in for |∇C| that needs no extra cost reads.
+
+Algorithm-specific keys (``updated`` for the discrete driver,
+``c_tilde_mean`` for probe-parallel) ride along unchanged.
+
+The state stays algorithm-specific (``MGDState`` / ``AnalogMGDState`` /
+``ProbeParallelState``) — a pytree of arrays, so generic code
+checkpoints it whole (``training.train_loop`` does) and reads the global
+step through ``state_step(state)``.
+
+Constructing through the registry is trajectory-preserving: the builders
+delegate to the exact step factories the legacy ``make_*_step`` entry
+points used, so f32 trajectories are bit-identical to pre-registry code
+(tests/test_driver_api.py pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+ALGORITHMS = ("discrete", "analog", "probe_parallel")
+
+
+# ---------------------------------------------------------------------------
+# The superset config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DriverConfig:
+    """Algorithm-agnostic MGD configuration (frozen → hashable/jit-static).
+
+    Shared fields default to ``None`` and resolve to the algorithm's
+    historical default at ``driver()`` time (Δθ = 1e-3/1e-2, η = 1e-2/1e-3
+    and rademacher/sinusoidal for discrete/analog respectively — exactly
+    the legacy ``MGDConfig`` / ``AnalogMGDConfig`` defaults, so converted
+    configs replay old trajectories bit-for-bit).
+
+    The discrete and analog sections are plain fields; ``driver()``
+    rejects a config whose *other*-section knobs were touched (e.g.
+    ``probes=4`` handed to the analog driver) — silent ignoring is how
+    mixed-up experiments happen.
+    """
+
+    # -- shared (None → per-algorithm default) ------------------------------
+    ptype: Optional[str] = None       # rademacher | walsh | sequential | sinusoidal
+    dtheta: Optional[float] = None    # Δθ, perturbation amplitude
+    eta: Optional[float] = None       # η, learning rate
+    tau_theta: Optional[float] = None  # integration time (int steps / float τ)
+    tau_p: int = 1                    # perturbation time constant
+    seed: int = 0
+    cost_noise: float = 0.0           # σ_C of the implicit device
+
+    # -- discrete section (Algorithm 1 / probe-parallel) --------------------
+    mode: str = "forward"             # forward (paper) | central
+    tau_x: int = 1                    # input-sample change time
+    replay: bool = False              # scalar-replay O(1)-memory updates
+    probes: int = 1                   # probe-averaging count
+    probe_impl: str = "map"           # map | vmap
+    momentum: float = 0.0             # heavy-ball coefficient on G
+    staleness: int = 0                # bounded-staleness feedback
+    fused: bool = False               # Pallas fused probe/update path
+    kernel_impl: Optional[str] = None  # pallas | interpret | ref | None=auto
+    update_noise: float = 0.0         # σ_θ of the implicit device
+
+    # -- analog section (Algorithm 2) ---------------------------------------
+    tau_hp: float = 100.0             # highpass (baseline-removal) τ
+    dt: float = 1.0                   # integration timestep
+
+    def replace(self, **kw) -> "DriverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Fields owned by one section, with their defaults: setting any of them
+# away from the default while asking for the *other* algorithm is an
+# ambiguous mix and is rejected with an actionable message.
+_DISCRETE_ONLY = {
+    "mode": "forward", "tau_x": 1, "replay": False, "probes": 1,
+    "probe_impl": "map", "momentum": 0.0, "staleness": 0, "fused": False,
+    "kernel_impl": None, "update_noise": 0.0,
+}
+_ANALOG_ONLY = {"tau_hp": 100.0, "dt": 1.0}
+
+
+def _reject_foreign(cfg: DriverConfig, algorithm: str) -> None:
+    foreign = _ANALOG_ONLY if algorithm in ("discrete", "probe_parallel") \
+        else _DISCRETE_ONLY
+    section = "analog" if foreign is _ANALOG_ONLY else "discrete"
+    for field, default in foreign.items():
+        if getattr(cfg, field) != default:
+            raise ValueError(
+                f"DriverConfig.{field}={getattr(cfg, field)!r} is a "
+                f"{section}-section knob the {algorithm!r} driver cannot "
+                f"honor — did you mean repro.driver({section!r}, ...)? "
+                f"(leave {field} at its default {default!r} otherwise)")
+
+
+def as_mgd_config(cfg):
+    """Resolve ``cfg`` to the discrete driver's ``MGDConfig``."""
+    from repro.core.analog import AnalogMGDConfig
+    from repro.core.mgd import MGDConfig
+
+    if isinstance(cfg, MGDConfig):
+        return cfg
+    if isinstance(cfg, AnalogMGDConfig):
+        raise TypeError("AnalogMGDConfig describes Algorithm 2 — use "
+                        "repro.driver('analog', cfg, ...) or a DriverConfig")
+    if not isinstance(cfg, DriverConfig):
+        raise TypeError(f"expected DriverConfig or MGDConfig, got "
+                        f"{type(cfg).__name__}")
+    tau_theta = 1 if cfg.tau_theta is None else cfg.tau_theta
+    if int(tau_theta) != tau_theta:
+        raise ValueError(
+            f"the discrete driver integrates over an integer number of "
+            f"steps; tau_theta={tau_theta} is fractional — fractional "
+            f"time constants belong to repro.driver('analog', ...)")
+    return MGDConfig(
+        ptype="rademacher" if cfg.ptype is None else cfg.ptype,
+        dtheta=1e-3 if cfg.dtheta is None else cfg.dtheta,
+        eta=1e-2 if cfg.eta is None else cfg.eta,
+        tau_p=cfg.tau_p, tau_theta=int(tau_theta), tau_x=cfg.tau_x,
+        mode=cfg.mode, replay=cfg.replay, probes=cfg.probes,
+        probe_impl=cfg.probe_impl, momentum=cfg.momentum, seed=cfg.seed,
+        cost_noise=cfg.cost_noise, update_noise=cfg.update_noise,
+        staleness=cfg.staleness, fused=cfg.fused,
+        kernel_impl=cfg.kernel_impl)
+
+
+def as_analog_config(cfg):
+    """Resolve ``cfg`` to the continuous driver's ``AnalogMGDConfig``."""
+    from repro.core.analog import AnalogMGDConfig
+    from repro.core.mgd import MGDConfig
+
+    if isinstance(cfg, AnalogMGDConfig):
+        return cfg
+    if isinstance(cfg, MGDConfig):
+        raise TypeError("MGDConfig describes the discrete Algorithm 1 — "
+                        "use repro.driver('discrete', cfg, ...) or a "
+                        "DriverConfig")
+    if not isinstance(cfg, DriverConfig):
+        raise TypeError(f"expected DriverConfig or AnalogMGDConfig, got "
+                        f"{type(cfg).__name__}")
+    return AnalogMGDConfig(
+        ptype="sinusoidal" if cfg.ptype is None else cfg.ptype,
+        dtheta=1e-2 if cfg.dtheta is None else cfg.dtheta,
+        eta=1e-3 if cfg.eta is None else cfg.eta,
+        tau_theta=10.0 if cfg.tau_theta is None else float(cfg.tau_theta),
+        tau_hp=cfg.tau_hp, tau_p=cfg.tau_p, dt=cfg.dt, seed=cfg.seed,
+        cost_noise=cfg.cost_noise)
+
+
+# ---------------------------------------------------------------------------
+# The uniform driver contract
+# ---------------------------------------------------------------------------
+
+
+class MGDDriver(NamedTuple):
+    """The optax-style ``(init, step)`` pair every algorithm exposes.
+
+    ``step(params, state, batch) -> (params, state, aux)`` with the
+    standardized ``aux`` keys (``cost``, ``c_tilde``, ``grad_norm_proxy``).
+    The trailing fields are construction metadata generic drivers use:
+    ``tau_x`` for sampler pacing, ``config`` the resolved algorithm
+    config, ``plant`` the device handed in (None for the implicit one).
+    """
+
+    init: Callable[[Pytree], Any]
+    step: Callable[[Pytree, Any, Any], Tuple[Pytree, Any, Dict]]
+    algorithm: str = "discrete"
+    config: Any = None
+    tau_x: int = 1
+    plant: Any = None
+
+
+class ProbeParallelState(NamedTuple):
+    """Probe-parallel carries no optimizer buffers — parameters update
+    every step from the all-gathered scalars; only the counter remains."""
+
+    step: jnp.ndarray
+
+
+def state_step(state) -> jnp.ndarray:
+    """The global iteration counter of any driver state (works traced)."""
+    if hasattr(state, "step"):
+        return state.step
+    if hasattr(state, "t"):
+        return state.t
+    raise TypeError(f"{type(state).__name__} has no step/t counter")
+
+
+def replace_step(state, step):
+    """``state`` with its iteration counter set to ``step``."""
+    step = jnp.asarray(step, jnp.int32)
+    if hasattr(state, "step"):
+        return state._replace(step=step)
+    if hasattr(state, "t"):
+        return state._replace(t=step)
+    raise TypeError(f"{type(state).__name__} has no step/t counter")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation hygiene for the legacy shims
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_deprecated(name: str, replacement: str) -> None:
+    """Single-fire DeprecationWarning per legacy entry point."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; build the algorithm through the registry "
+        f"instead: {replacement}", DeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., MGDDriver]] = {}
+
+
+def register_driver(name: str):
+    """Register a builder under ``name`` (decorator).  Builders receive
+    ``(cfg, loss_fn, **kwargs)`` and return an ``MGDDriver``."""
+    def deco(builder):
+        _REGISTRY[name] = builder
+        return builder
+    return deco
+
+
+def driver(algorithm: str, cfg=None, loss_fn: Optional[Callable] = None, *,
+           plant=None, probe_fn: Optional[Callable] = None, mesh=None,
+           total_params: Optional[int] = None, **kwargs) -> MGDDriver:
+    """Construct any MGD algorithm behind the uniform driver contract.
+
+    ``algorithm`` is one of ``"discrete"`` (paper Algorithm 1, incl. the
+    fused Pallas path), ``"analog"`` (Algorithm 2), or
+    ``"probe_parallel"`` (pod-level probe averaging; needs ``mesh``).
+    ``cfg`` is a ``DriverConfig`` (or the algorithm's legacy config —
+    accepted for migration) and ``loss_fn(params, batch) -> cost`` is the
+    model interface; with an explicit ``plant`` it may be None (the plant
+    is the cost oracle).
+    """
+    if algorithm not in _REGISTRY:
+        raise ValueError(f"unknown algorithm {algorithm!r}; registered: "
+                         f"{sorted(_REGISTRY)}")
+    if cfg is None:
+        cfg = DriverConfig()
+    if isinstance(cfg, DriverConfig):
+        _reject_foreign(cfg, algorithm)
+    return _REGISTRY[algorithm](
+        cfg, loss_fn, plant=plant, probe_fn=probe_fn, mesh=mesh,
+        total_params=total_params, **kwargs)
+
+
+def _standard_aux(metrics: Dict, c_tilde, dtheta: float) -> Dict:
+    aux = dict(metrics)
+    aux["grad_norm_proxy"] = jnp.abs(
+        jnp.asarray(c_tilde, jnp.float32)) / jnp.float32(dtheta)
+    return aux
+
+
+@register_driver("discrete")
+def _build_discrete(cfg, loss_fn, *, plant=None, probe_fn=None, mesh=None,
+                    total_params=None) -> MGDDriver:
+    from repro.core.mgd import build_mgd_step, mgd_init
+
+    if mesh is not None:
+        raise ValueError("the discrete driver is single-program — a mesh "
+                         "only parameterizes repro.driver('probe_parallel', "
+                         "...); under pjit the discrete step shards through "
+                         "the params/batch shardings instead")
+    mcfg = as_mgd_config(cfg)
+    raw = build_mgd_step(loss_fn, mcfg, total_params, probe_fn=probe_fn,
+                         plant=plant)
+
+    def step(params, state, batch):
+        params, state, m = raw(params, state, batch)
+        return params, state, _standard_aux(m, m["c_tilde"], mcfg.dtheta)
+
+    return MGDDriver(
+        init=lambda params: mgd_init(params, mcfg), step=step,
+        algorithm="discrete", config=mcfg, tau_x=mcfg.tau_x, plant=plant)
+
+
+@register_driver("analog")
+def _build_analog(cfg, loss_fn, *, plant=None, probe_fn=None, mesh=None,
+                  total_params=None) -> MGDDriver:
+    from repro.core.analog import analog_init, build_analog_step
+
+    if mesh is not None:
+        raise ValueError("the analog driver is single-program; mesh only "
+                         "parameterizes repro.driver('probe_parallel', ...)")
+    if probe_fn is not None:
+        raise ValueError("the analog driver has no fused probe path — "
+                         "probe_fn belongs to repro.driver('discrete', "
+                         "DriverConfig(fused=True), ...)")
+    if isinstance(cfg, DriverConfig) and cfg.probes != 1:
+        raise ValueError(f"probes={cfg.probes} is a discrete-section knob; "
+                         "Algorithm 2 multiplexes probes in frequency, not "
+                         "by count — use repro.driver('discrete', ...) for "
+                         "probe averaging")
+    acfg = as_analog_config(cfg)
+    raw = build_analog_step(loss_fn, acfg, total_params, plant=plant)
+
+    def step(params, state, batch):
+        params, state, m = raw(params, state, batch)
+        return params, state, _standard_aux(m, m["c_tilde"], acfg.dtheta)
+
+    return MGDDriver(
+        init=lambda params: analog_init(params, acfg), step=step,
+        algorithm="analog", config=acfg, tau_x=1, plant=plant)
+
+
+@register_driver("probe_parallel")
+def _build_probe_parallel(cfg, loss_fn, *, plant=None, probe_fn=None,
+                          mesh=None, total_params=None, probe_axis="pod",
+                          param_specs=None, batch_specs=None) -> MGDDriver:
+    from repro.core.probe_parallel import build_probe_parallel_step
+
+    if mesh is None:
+        raise ValueError("repro.driver('probe_parallel', ...) needs a mesh= "
+                         "with the probe axis (default name 'pod') — each "
+                         "mesh slice along it evaluates one probe")
+    if probe_fn is not None:
+        raise ValueError("probe_parallel has no fused probe path yet — "
+                         "probe_fn belongs to the discrete driver")
+    if isinstance(cfg, DriverConfig) and cfg.probes != 1:
+        raise ValueError(f"probes={cfg.probes} conflicts with "
+                         "probe_parallel: the probe count IS the mesh's "
+                         f"{probe_axis!r} axis size — leave probes=1")
+    mcfg = as_mgd_config(cfg)
+    if mcfg.tau_theta != 1 or mcfg.replay or mcfg.staleness:
+        raise ValueError("probe_parallel updates every step (tau_theta=1, "
+                         "no replay/staleness) — temporal integration "
+                         "composes at the driver level, not inside the "
+                         "shard_map step")
+    raw = build_probe_parallel_step(
+        loss_fn, mcfg, mesh, probe_axis=probe_axis, param_specs=param_specs,
+        batch_specs=batch_specs, plant=plant)
+
+    def init(params):
+        return ProbeParallelState(step=jnp.zeros((), jnp.int32))
+
+    def step(params, state, batch):
+        params, m = raw(params, state.step, batch)
+        aux = _standard_aux(m, m["c_tilde_mean"], mcfg.dtheta)
+        aux["c_tilde"] = m["c_tilde_mean"]
+        return params, ProbeParallelState(step=state.step + 1), aux
+
+    return MGDDriver(init=init, step=step, algorithm="probe_parallel",
+                     config=mcfg, tau_x=mcfg.tau_x, plant=plant)
+
+
+# ---------------------------------------------------------------------------
+# Generic multi-step runner (τ_x semantics + lax.scan), driver-agnostic
+# ---------------------------------------------------------------------------
+
+
+def make_epoch(drv: MGDDriver, steps_per_call: int,
+               sample_fn: Callable[[jnp.ndarray], Any]):
+    """Scan ``steps_per_call`` driver iterations inside one jitted call.
+
+    ``sample_fn(sample_index) -> batch`` implements τ_x: iteration n uses
+    sample index n // τ_x.  Works for any pure-JAX driver; external
+    plants (ordered host callbacks) must be driven step-by-step instead.
+    Returns ``run(params, state) -> (params, state, stacked_aux)``.
+    """
+    def body(carry, _):
+        params, state = carry
+        batch = sample_fn(state_step(state) // drv.tau_x)
+        params, state, aux = drv.step(params, state, batch)
+        return (params, state), aux
+
+    @jax.jit
+    def run(params, state):
+        (params, state), aux = jax.lax.scan(
+            body, (params, state), None, length=steps_per_call)
+        return params, state, aux
+
+    return run

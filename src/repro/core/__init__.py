@@ -1,12 +1,21 @@
-"""MGD core — the paper's contribution as a composable JAX module."""
-from .mgd import MGDConfig, MGDState, mgd_init, make_mgd_step, make_mgd_epoch
-from .analog import AnalogMGDConfig, AnalogMGDState, analog_init, make_analog_step
+"""MGD core — the paper's contribution as a composable JAX module.
+
+Algorithms are constructed through the driver registry
+(``repro.driver("discrete" | "analog" | "probe_parallel", cfg, loss_fn)``);
+the ``make_*_step`` names below are deprecated shims kept for migration.
+"""
+from .mgd import (MGDConfig, MGDState, build_mgd_step, make_mgd_epoch,
+                  make_mgd_step, mgd_init)
+from .analog import (AnalogMGDConfig, AnalogMGDState, analog_init,
+                     build_analog_step, make_analog_step)
 from .cost import mse, softmax_xent, COSTS
 from . import perturbations, noise, forward_grad, utils
 
 __all__ = [
-    "MGDConfig", "MGDState", "mgd_init", "make_mgd_step", "make_mgd_epoch",
-    "AnalogMGDConfig", "AnalogMGDState", "analog_init", "make_analog_step",
+    "MGDConfig", "MGDState", "mgd_init", "build_mgd_step", "make_mgd_step",
+    "make_mgd_epoch",
+    "AnalogMGDConfig", "AnalogMGDState", "analog_init", "build_analog_step",
+    "make_analog_step",
     "mse", "softmax_xent", "COSTS",
     "perturbations", "noise", "forward_grad", "utils",
 ]

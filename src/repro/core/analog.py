@@ -1,5 +1,8 @@
 """Continuous-time MGD — the paper's Algorithm 2 (analog hardware).
 
+Construct through the registry: ``repro.driver("analog", cfg, loss_fn)``
+(``make_analog_step`` remains as a deprecated shim).
+
 Discretized with timestep ``dt``:
 
     C̃(t)  ← α_hp · (C̃(t−dt) + C(t) − C(t−dt))        α_hp = τ_hp/(τ_hp+dt)
@@ -69,14 +72,15 @@ def analog_init(params: Pytree, cfg: AnalogMGDConfig) -> AnalogMGDState:
     )
 
 
-def make_analog_step(
+def build_analog_step(
     loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
     cfg: AnalogMGDConfig,
     total_params: Optional[int] = None,
     *,
     plant=None,
 ):
-    """One dt tick of Algorithm 2.  Returns step_fn(params, state, batch).
+    """One dt tick of Algorithm 2 (the registry's analog builder).
+    Returns step_fn(params, state, batch).
 
     Cost reads and the continuous parameter write go through a
     ``repro.hardware.Plant`` — the same device models (noisy, quantized,
@@ -123,3 +127,22 @@ def make_analog_step(
         return new_params, new_state, metrics
 
     return step_fn
+
+
+def make_analog_step(
+    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
+    cfg: AnalogMGDConfig,
+    total_params: Optional[int] = None,
+    *,
+    plant=None,
+):
+    """Deprecated: use ``repro.driver("analog", cfg, loss_fn, ...)``.
+
+    Delegates to the registry; trajectory-preserving (bit-identical f32),
+    with the standardized ``grad_norm_proxy`` aux key added.
+    """
+    from repro.api.driver import driver, warn_deprecated
+    warn_deprecated("make_analog_step",
+                    "repro.driver('analog', cfg, loss_fn, ...).step")
+    return driver("analog", cfg, loss_fn, total_params=total_params,
+                  plant=plant).step

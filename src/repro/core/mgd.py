@@ -1,5 +1,19 @@
 """Multiplexed gradient descent — discrete algorithm (paper Algorithm 1).
 
+Construct this algorithm through the driver registry::
+
+    mgd = repro.driver("discrete", repro.DriverConfig(...), loss_fn,
+                       plant=..., probe_fn=...)
+    state = mgd.init(params)
+    params, state, aux = mgd.step(params, state, batch)
+
+``repro.driver`` (see ``repro.api.driver``) builds the discrete,
+continuous, and probe-parallel algorithms behind one optax-style
+``(init, step)`` contract; the legacy ``make_mgd_step`` entry point
+remains as a deprecated shim that delegates to the registry.  This
+module keeps the discrete algorithm's implementation: ``MGDConfig``,
+``MGDState``, ``mgd_init``, and the step factory ``build_mgd_step``.
+
 The MGD step is *model-free*: it consumes only a scalar cost oracle — a
 ``repro.hardware.Plant`` (ideal, noisy, quantized, or an external chip),
 or equivalently a plain ``loss_fn(params, batch) -> cost`` wrapped into
@@ -223,7 +237,7 @@ def _probe_seed(cfg: MGDConfig, probe) -> jnp.ndarray:
             + jnp.asarray(probe, jnp.uint32) * jnp.uint32(0x9E3779B9))
 
 
-def make_mgd_step(
+def build_mgd_step(
     loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
     cfg: MGDConfig,
     total_params: Optional[int] = None,
@@ -231,7 +245,7 @@ def make_mgd_step(
     probe_fn: Optional[Callable] = None,
     plant=None,
 ):
-    """Build the jittable MGD iteration.
+    """Build the jittable MGD iteration (the registry's discrete builder).
 
     ``loss_fn(params, batch) -> scalar cost`` is the ONLY model interface —
     MGD never sees the network topology (model-free, paper §1).  All cost
@@ -551,6 +565,32 @@ def make_mgd_step(
 
 
 # ---------------------------------------------------------------------------
+# Legacy entry point (deprecated shim over the registry)
+# ---------------------------------------------------------------------------
+
+
+def make_mgd_step(
+    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
+    cfg: MGDConfig,
+    total_params: Optional[int] = None,
+    *,
+    probe_fn: Optional[Callable] = None,
+    plant=None,
+):
+    """Deprecated: use ``repro.driver("discrete", cfg, loss_fn, ...)``.
+
+    Delegates to the registry; the returned step is trajectory-preserving
+    (bit-identical f32 parameters/C̃) and additionally reports the
+    standardized ``grad_norm_proxy`` aux key.
+    """
+    from repro.api.driver import driver, warn_deprecated
+    warn_deprecated("make_mgd_step",
+                    "repro.driver('discrete', cfg, loss_fn, ...).step")
+    return driver("discrete", cfg, loss_fn, total_params=total_params,
+                  probe_fn=probe_fn, plant=plant).step
+
+
+# ---------------------------------------------------------------------------
 # Multi-step driver (τ_x semantics + lax.scan over iterations)
 # ---------------------------------------------------------------------------
 
@@ -569,9 +609,10 @@ def make_mgd_epoch(
     amortize dispatch overhead (one device program per chunk of steps).
     Note external plants (ordered host callbacks) cannot live under
     ``lax.scan``'s cond-free requirement on all jax versions — drive them
-    step-by-step via ``make_mgd_step`` instead.
+    step-by-step via the driver's ``step`` instead.  The generic
+    equivalent for any driver is ``repro.api.make_epoch``.
     """
-    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
+    step_fn = build_mgd_step(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
 
     def body(carry, _):
         params, state = carry

@@ -34,7 +34,7 @@ from .mgd import MGDConfig
 from .utils import tree_axpy
 
 
-def make_probe_parallel_step(
+def build_probe_parallel_step(
     loss_fn: Callable,
     cfg: MGDConfig,
     mesh,
@@ -44,7 +44,9 @@ def make_probe_parallel_step(
     batch_specs=None,
     plant=None,
 ):
-    """Build step_fn(params, step, batch) → (params, metrics).
+    """Build step_fn(params, step, batch) → (params, metrics) — the
+    registry's probe-parallel builder (``repro.driver("probe_parallel",
+    cfg, loss_fn, mesh=mesh)`` wraps this behind the uniform contract).
 
     central-difference, τ_θ = 1 (immediate update) — the at-scale serving
     configuration.  params stay replicated over ``probe_axis`` and keep
@@ -56,7 +58,11 @@ def make_probe_parallel_step(
     and the post-all-gather write lands through the plant once per step.
     Pure-JAX plants only — the probe loop runs inside ``shard_map``.
     """
-    assert cfg.mode == "central", "probe-parallel uses central differences"
+    if cfg.mode != "central":
+        raise ValueError(
+            f"probe-parallel uses central differences (its per-pod probe "
+            f"shares no C₀ memory); got mode={cfg.mode!r} — set "
+            f'mode="central"')
     from repro.core.mgd import _resolve_plant
     plant = _resolve_plant(loss_fn, cfg, plant=plant)
     if plant.meta.external:
@@ -107,3 +113,29 @@ def make_probe_parallel_step(
         return shard(params, jnp.asarray(step, jnp.int32), batch)
 
     return step_fn
+
+
+def make_probe_parallel_step(
+    loss_fn: Callable,
+    cfg: MGDConfig,
+    mesh,
+    *,
+    probe_axis: str = "pod",
+    param_specs=None,
+    batch_specs=None,
+    plant=None,
+):
+    """Deprecated: use ``repro.driver("probe_parallel", cfg, loss_fn,
+    mesh=mesh)``.
+
+    Returns the RAW ``step_fn(params, step, batch) → (params, metrics)``
+    (the registry wraps the same step behind the uniform
+    ``(params, state, batch)`` contract).
+    """
+    from repro.api.driver import warn_deprecated
+    warn_deprecated(
+        "make_probe_parallel_step",
+        "repro.driver('probe_parallel', cfg, loss_fn, mesh=mesh).step")
+    return build_probe_parallel_step(
+        loss_fn, cfg, mesh, probe_axis=probe_axis, param_specs=param_specs,
+        batch_specs=batch_specs, plant=plant)

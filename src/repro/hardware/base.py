@@ -55,6 +55,7 @@ class PlantMeta:
     write_noise: float = 0.0         # σ_θ, persistent-write noise in units of Δθ
     sigma_a: float = 0.0             # σ_a, static activation-defect scale
     weight_bits: Optional[int] = None  # DAC resolution of persistent writes
+    adc_bits: Optional[int] = None     # ADC resolution of the cost readout
     write_latency_s: float = 0.0     # τ per persistent parameter write
     read_latency_s: float = 0.0      # τ per cost readout (≈ τ_p floor)
     external: bool = False           # True → host-callback / process boundary

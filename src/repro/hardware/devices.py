@@ -60,16 +60,22 @@ def noisy_mlp_plant(sizes: Sequence[int], *, sigma_c: float = 0.0,
 
 def quantized_mlp_plant(sizes: Sequence[int], *, bits: int = 8,
                         w_clip: float = 2.0, write_tau: float = 0.0,
-                        quantize_probes: bool = False, sigma_a: float = 0.0,
+                        quantize_probes: bool = False,
+                        adc_bits: Optional[int] = None,
+                        adc_mode: str = "round", adc_range: float = 1.0,
+                        sigma_a: float = 0.0,
                         device_seed: int = 0, cost=mse) -> QuantizedPlant:
-    """An MLP whose weight memory sits behind a ``bits``-bit DAC."""
+    """An MLP whose weight memory sits behind a ``bits``-bit DAC and
+    (optionally) whose cost readout passes an ``adc_bits``-bit ADC."""
     loss_fn, probe_fn, _ = mlp_device_fns(
         sizes, sigma_a=sigma_a, device_seed=device_seed, cost=cost)
     return QuantizedPlant(
         loss_fn, bits=bits, w_clip=w_clip, write_tau=write_tau,
-        quantize_probes=quantize_probes, probe_fn=probe_fn,
+        quantize_probes=quantize_probes, adc_bits=adc_bits,
+        adc_mode=adc_mode, adc_range=adc_range, seed=device_seed,
+        probe_fn=probe_fn,
         meta=PlantMeta(name=f"mlp-dac{bits}", weight_bits=bits,
-                       sigma_a=sigma_a))
+                       adc_bits=adc_bits, sigma_a=sigma_a))
 
 
 class SimulatedAnalogChip:

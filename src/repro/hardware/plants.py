@@ -28,6 +28,17 @@ dedicated perturbation line / LFSR at each synapse); set
 ``quantize_probes=True`` to model probes that must also round-trip the
 DAC (Δθ below the LSB then becomes invisible and training stalls — see
 benchmarks/hardware_plants.py).
+
+The dual imperfection — the cost READOUT through a k-bit ADC — is
+``adc_bits``/``adc_mode``: every ``read_cost``/``read_cost_pair`` scalar
+is clipped to [0, adc_range] and rounded to the ADC grid,
+deterministically (``"round"``) or with counter-keyed stochastic
+rounding (``"stochastic"``, unbiased: E[q] = C).  Because MGD's only
+feedback is C̃ = C(θ+θ̃) − C₀, an ADC LSB above the typical |C̃| floors
+the error signal at 0 and training stalls — the Δθ·|∇C| signal floor the
+paper's Fig. 8 implies, mapped onto ADC bits (stochastic rounding
+recovers the signal in expectation at the cost of readout variance; see
+benchmarks/hardware_plants.py and EXPERIMENTS.md §Hardware).
 """
 from __future__ import annotations
 
@@ -102,28 +113,49 @@ class NoisyPlant(Plant):
 
 class QuantizedPlant(Plant):
     """Device whose persistent weight memory sits behind a limited-bit DAC
-    with an optional first-order slow-write lag."""
+    with an optional first-order slow-write lag, and (optionally) whose
+    cost readout passes a limited-bit ADC."""
 
     def __init__(self, loss_fn: Callable, *,
                  bits: int = 8,
                  w_clip: float = 2.0,
                  write_tau: float = 0.0,
                  quantize_probes: bool = False,
+                 adc_bits: Optional[int] = None,
+                 adc_mode: str = "round",
+                 adc_range: float = 1.0,
+                 seed: int = 0,
                  probe_fn: Optional[Callable] = None,
                  meta: Optional[PlantMeta] = None):
         if bits < 1:
             raise ValueError(f"weight DAC needs >= 1 bit, got {bits}")
+        if adc_bits is not None and adc_bits < 1:
+            raise ValueError(f"cost ADC needs >= 1 bit, got {adc_bits}")
+        if adc_mode not in ("round", "stochastic"):
+            raise ValueError(f"adc_mode must be 'round' or 'stochastic', "
+                             f"got {adc_mode!r}")
         self.loss_fn = loss_fn
         self.bits = int(bits)
         self.w_clip = float(w_clip)
         self.write_tau = float(write_tau)
         self.quantize_probes = bool(quantize_probes)
+        self.adc_bits = None if adc_bits is None else int(adc_bits)
+        self.adc_mode = adc_mode
+        self.adc_range = float(adc_range)
+        self.seed = int(seed)
         self.probe_fn = probe_fn
-        self.meta = meta or PlantMeta(name=f"dac{bits}", weight_bits=self.bits)
+        self.meta = meta or PlantMeta(name=f"dac{bits}", weight_bits=self.bits,
+                                      adc_bits=self.adc_bits)
 
     @property
     def lsb(self) -> float:
         return 2.0 * self.w_clip / (2 ** self.bits - 1)
+
+    @property
+    def adc_lsb(self) -> float:
+        if self.adc_bits is None:
+            raise ValueError("plant has no cost ADC (adc_bits=None)")
+        return self.adc_range / (2 ** self.adc_bits - 1)
 
     def _quantize_leaf(self, x):
         scale = jnp.float32(self.lsb)
@@ -149,10 +181,32 @@ class QuantizedPlant(Plant):
                 prev, target)
         return self.quantize(target)
 
+    def _adc(self, cost, step, tag):
+        """k-bit cost readout: clip to [0, adc_range], land on the ADC
+        grid.  Stochastic mode rounds up with probability equal to the
+        fractional code (unbiased), counter-keyed on (seed, step, tag) so
+        checkpoint/restart replays the identical readout stream."""
+        if self.adc_bits is None:
+            return cost
+        scale = jnp.float32(self.adc_lsb)
+        code = jnp.clip(cost.astype(jnp.float32), 0.0, self.adc_range) / scale
+        if self.adc_mode == "stochastic":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 131), tag)
+            key = jax.random.fold_in(key, step)
+            code = jnp.floor(code + jax.random.uniform(key, (), jnp.float32))
+        else:
+            code = jnp.round(code)
+        return code * scale
+
     def read_cost(self, params, batch, *, step, tag: int = 0):
         if self.quantize_probes:
             params = self.quantize(params)
-        return self.loss_fn(params, batch)
+        return self._adc(self.loss_fn(params, batch), step, tag)
+
+    # read_cost_pair needs no override: the base class issues two
+    # read_cost calls with consecutive tags, so each half of the
+    # antithetic pair round-trips the ADC independently (two physical
+    # conversions), exactly like hardware.
 
     def apply_perturbed(self, params, batch, probe, *, step, tags):
         # persistent params are already on the DAC grid (write_params);
@@ -161,8 +215,12 @@ class QuantizedPlant(Plant):
         if self.quantize_probes:
             raise NotImplementedError(
                 "quantize_probes=True has no fused kernel path")
-        return super().apply_perturbed(params, batch, probe,
-                                       step=step, tags=tags)
+        costs = super().apply_perturbed(params, batch, probe,
+                                        step=step, tags=tags)
+        if self.adc_bits is not None:
+            costs = jnp.stack([self._adc(costs[i], step, t)
+                               for i, t in enumerate(tags)])
+        return costs
 
 
 def plant_from_config(loss_fn, cfg, *, probe_fn=None) -> Plant:

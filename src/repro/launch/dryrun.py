@@ -19,8 +19,9 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.api import driver  # noqa: E402
 from repro.configs import ARCH_IDS, SHAPES, get_config, runnable_cells  # noqa: E402
-from repro.core import MGDConfig, make_mgd_step, mgd_init  # noqa: E402
+from repro.core import MGDConfig, mgd_init  # noqa: E402
 from repro.core.mgd import MGDState  # noqa: E402
 from repro.distributed import sharding as shd  # noqa: E402
 from repro.launch import specs  # noqa: E402
@@ -95,7 +96,7 @@ def model_flops(cfg, shape, kind: str, n_forwards: int) -> float:
 def build_train(cfg, shape, mesh, mgd_mode="forward"):
     mgd_cfg = default_mgd_config(mgd_mode)
     loss_fn = lambda p, b: model_loss(p, cfg, b)          # noqa: E731
-    step_fn = make_mgd_step(loss_fn, mgd_cfg)
+    step_fn = driver("discrete", mgd_cfg, loss_fn).step
     aparams = specs.abstract_params(cfg)
     astate = jax.eval_shape(functools.partial(mgd_init, cfg=mgd_cfg), aparams)
     abatch = specs.train_input_specs(cfg, shape)

@@ -1,15 +1,19 @@
 """Training drivers: MGD (the paper) and backprop+SGD (the baseline).
 
-Both loops share the same loss_fn / sampler interfaces so every comparison
-in benchmarks/ runs the two algorithms on identical models and data.  The
-MGD loop scans ``chunk`` iterations per device program (τ_x handled inside
-the scan via index-seeded samplers), checkpoints periodically, and resumes
-deterministically — the perturbation sequence is a pure function of the
-global step and checkpoints carry the FULL optimizer state (G accumulator,
-momentum, replay window), so a resumed run is the uninterrupted run.  The
-MGD loop drives any ``repro.hardware.Plant`` (ideal/noisy/quantized
-devices; external chips need the un-scanned per-step driver — see
-``make_mgd_epoch``'s note).
+``train_mgd`` consumes any ``repro.api.MGDDriver`` — discrete Algorithm 1
+(incl. the fused Pallas path), continuous Algorithm 2, or probe-parallel
+— or any config the registry resolves (``DriverConfig``, ``MGDConfig``,
+``AnalogMGDConfig``).  Both loops share the same loss_fn / sampler
+interfaces so every comparison in benchmarks/ runs the algorithms on
+identical models and data.  The MGD loop scans ``chunk`` iterations per
+device program (τ_x handled inside the scan via index-seeded samplers),
+checkpoints periodically, and resumes deterministically — the
+perturbation sequence is a pure function of the global step and
+checkpoints carry the driver's FULL state pytree (whatever the algorithm
+keeps: G accumulator, momentum, replay window, filter memories), so a
+resumed run is the uninterrupted run.  The loop drives any
+``repro.hardware.Plant`` (ideal/noisy/quantized devices; external chips
+need the un-scanned per-step driver — see ``api.make_epoch``'s note).
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.api.driver import MGDDriver, driver as build_driver, state_step
+from repro.core import MGDState
 from repro.optim import sgd_init, sgd_step
 from . import checkpoint as ckpt
 
@@ -33,26 +38,82 @@ class TrainResult:
     steps_done: int
 
 
-def _opt_buffers(state):
-    """The pytree-valued MGDState buffers (None entries vanish from the
-    flattened tree, so the structure is a pure function of the config)."""
-    return {"g": state.g, "replay_c": state.replay_c, "m": state.m}
+def _as_driver(loss_fn, cfg, *, probe_fn=None, plant=None, mesh=None,
+               algorithm: Optional[str] = None) -> MGDDriver:
+    """Resolve ``cfg`` to an ``MGDDriver``: pass one through, or build it
+    from a config (legacy configs pick their algorithm; ``DriverConfig``
+    defaults to discrete unless ``algorithm`` says otherwise)."""
+    if isinstance(cfg, MGDDriver):
+        if loss_fn is not None or probe_fn is not None or plant is not None \
+                or mesh is not None:
+            raise ValueError(
+                "got a pre-built MGDDriver AND loss_fn/probe_fn/plant/mesh "
+                "— those belong to repro.driver(...) at construction time")
+        return cfg
+    if algorithm is None:
+        from repro.core import AnalogMGDConfig
+        algorithm = "analog" if isinstance(cfg, AnalogMGDConfig) \
+            else "discrete"
+    return build_driver(algorithm, cfg, loss_fn, probe_fn=probe_fn,
+                        plant=plant, mesh=mesh)
 
 
 def _ckpt_tree(params, state):
-    """Checkpoint payload: params + the FULL optimizer state.  Dropping
-    G/momentum/replay buffers on resume would silently diverge a resumed
-    run from the uninterrupted one mid-τ_θ-window."""
-    return {"params": params, "opt": _opt_buffers(state)}
+    """Checkpoint payload: params + the driver's FULL state pytree (None
+    entries vanish from the flattened tree, so the structure is a pure
+    function of the driver config).  Dropping optimizer buffers on resume
+    would silently diverge a resumed run mid-τ_θ-window."""
+    return {"params": params, "state": state}
+
+
+def _restore_any(checkpoint_dir, params, state, log):
+    """Restore the newest checkpoint into (params, state), falling back
+    through the historical layouts: full-state → PR-2 buffers-only
+    (discrete) → params-only (buffers reset)."""
+    try:
+        tree, _, start = ckpt.restore(checkpoint_dir,
+                                      _ckpt_tree(params, state))
+        return tree["params"], tree["state"], start
+    except AssertionError:
+        pass
+    if isinstance(state, MGDState):
+        try:    # PR-2 layout: {"params", "opt": {g, replay_c, m}} + extra
+            tree, extra, start = ckpt.restore(
+                checkpoint_dir,
+                {"params": params, "opt": {"g": state.g,
+                                           "replay_c": state.replay_c,
+                                           "m": state.m}})
+            state = state._replace(
+                g=tree["opt"]["g"], replay_c=tree["opt"]["replay_c"],
+                m=tree["opt"]["m"], step=jnp.asarray(start, jnp.int32),
+                c0=jnp.asarray(extra.get("c0", 0.0), jnp.float32),
+                metric_cost=jnp.asarray(extra.get("metric_cost", 0.0),
+                                        jnp.float32))
+            return tree["params"], state, start
+        except AssertionError:
+            pass
+    # params-only legacy checkpoint
+    params, extra, start = ckpt.restore(checkpoint_dir, params)
+    if log:
+        log("[mgd] legacy checkpoint: optimizer buffers reset")
+    from repro.api.driver import replace_step
+    state = replace_step(state, start)
+    if isinstance(state, MGDState):
+        state = state._replace(
+            c0=jnp.asarray(extra.get("c0", 0.0), jnp.float32),
+            metric_cost=jnp.asarray(extra.get("metric_cost", 0.0),
+                                    jnp.float32))
+    return params, state, start
 
 
 def train_mgd(
     loss_fn: Optional[Callable],
     params,
-    cfg: MGDConfig,
+    cfg,                          # MGDDriver | DriverConfig | legacy config
     sample_fn: Callable,          # sample_fn(sample_index) -> batch
     num_steps: int,
     *,
+    algorithm: Optional[str] = None,   # registry name for a DriverConfig
     chunk: int = 100,
     eval_fn: Optional[Callable] = None,    # eval_fn(params) -> dict
     eval_every: int = 0,
@@ -62,37 +123,23 @@ def train_mgd(
     log: Optional[Callable] = print,
     probe_fn: Optional[Callable] = None,   # fused probe path (cfg.fused)
     plant=None,                   # hardware.Plant device (None → implicit)
+    mesh=None,                    # probe-parallel probe mesh
 ) -> TrainResult:
-    """Run MGD for ``num_steps`` iterations (τ_p ticks)."""
-    state = mgd_init(params, cfg)
+    """Run any MGD driver for ``num_steps`` iterations (τ_p ticks)."""
+    drv = _as_driver(loss_fn, cfg, probe_fn=probe_fn, plant=plant,
+                     mesh=mesh, algorithm=algorithm)
+    state = drv.init(params)
     start_step = 0
     if checkpoint_dir and resume and ckpt.latest_step(checkpoint_dir) is not None:
-        try:
-            tree, extra, start_step = ckpt.restore(
-                checkpoint_dir, _ckpt_tree(params, state))
-            params = tree["params"]
-            state = state._replace(g=tree["opt"]["g"],
-                                   replay_c=tree["opt"]["replay_c"],
-                                   m=tree["opt"]["m"])
-        except AssertionError:
-            # legacy params-only checkpoint (pre full-state format)
-            params, extra, start_step = ckpt.restore(checkpoint_dir, params)
-            if log:
-                log("[mgd] legacy checkpoint: optimizer buffers reset")
-        state = state._replace(
-            step=jnp.asarray(start_step, jnp.int32),
-            c0=jnp.asarray(extra.get("c0", 0.0), jnp.float32),
-            metric_cost=jnp.asarray(extra.get("metric_cost", 0.0),
-                                    jnp.float32))
+        params, state, start_step = _restore_any(
+            checkpoint_dir, params, state, log)
         if log:
             log(f"[mgd] resumed from step {start_step}")
 
-    step_fn = make_mgd_step(loss_fn, cfg, probe_fn=probe_fn, plant=plant)
-
     def body(carry, _):
         p, s = carry
-        batch = sample_fn(s.step // cfg.tau_x)
-        p, s, m = step_fn(p, s, batch)
+        batch = sample_fn(state_step(s) // drv.tau_x)
+        p, s, m = drv.step(p, s, batch)
         return (p, s), m
 
     def make_runner(n):
@@ -122,9 +169,8 @@ def train_mgd(
                 f"({(time.time()-t0):.1f}s)")
         if checkpoint_dir and checkpoint_every and done % checkpoint_every == 0:
             ckpt.save(checkpoint_dir, done, _ckpt_tree(params, state),
-                      extra={"c0": float(state.c0),
-                             "metric_cost": float(state.metric_cost),
-                             "algo": "mgd", "seed": cfg.seed})
+                      extra={"algo": drv.algorithm,
+                             "seed": int(getattr(drv.config, "seed", 0))})
     return TrainResult(params, state, history, done)
 
 
