@@ -1,0 +1,152 @@
+"""Farm scaling: probe-parallel MGD over k external chips (§6).
+
+Three questions, all driven through ``repro.driver("probe_parallel_external",
+cfg, plant=ChipFarm(...))``:
+
+* **Estimator variance vs k** — the k-chip averaged error signal
+  ``(1/k)Σ C̃_k·θ̃_k/Δθ²`` is k independent probe estimates of the same
+  gradient, so its variance should fall ∝ 1/k (Oripov et al. 2025's
+  scaling axis) at ZERO extra wall-clock: the chips evaluate their pairs
+  concurrently.  Measured as the across-step variance of one update
+  component at frozen parameters.
+* **Convergence vs k** — nist7x7 through farms of k defective chips
+  (distinct device seeds); mean on-chip accuracy after a fixed budget.
+* **Wall-clock projection** — ``PlantMeta.step_latency_s`` with per-chip
+  read counts: a single chip probing k times serially pays 2k reads per
+  step; the k-chip farm pays 2 (concurrent pairs), Table-3 style.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import DriverConfig, driver, replace_step
+from repro.data import tasks
+from repro.data.pipeline import generator_sampler
+from repro.hardware import PlantMeta, simulated_chip_farm
+from repro.models.simple import mlp_init
+from repro.training.train_loop import train_mgd
+
+from .common import median
+
+KS = (1, 2, 4, 8)
+N_SEEDS = 3
+
+
+# Two chip flavors for the variance law: MATCHED chips (no defects, no
+# write noise — every chip measures the same cost, so the averaged
+# estimator is k iid probe estimates and the textbook 1/k shows up
+# clean) and DIVERSE chips (distinct σ_a defect draws + σ_θ writes — the
+# realistic farm, where per-chip gradient magnitudes differ and the law
+# saturates: averaging still helps, just sub-linearly).
+VARIANCE_CHIPS = [
+    ("matched", dict(sigma_a=0.0, sigma_theta=0.0, sigma_c=1e-3)),
+    ("diverse", dict(sigma_a=0.1, sigma_theta=0.01, sigma_c=1e-3)),
+]
+
+
+def _variance_rows(ks, rounds, seed):
+    """Across-step variance of one averaged-update component at frozen
+    params — the C̃-estimator variance the farm averages down."""
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+    params = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+    cfg = DriverConfig(dtheta=1e-2, eta=1.0, mode="central", seed=seed)
+    rows = []
+    for flavor, chip_kw in VARIANCE_CHIPS:
+        variances = {}
+        for k in ks:
+            farm = simulated_chip_farm(k, (2, 2, 1), base_seed=seed,
+                                       **chip_kw)
+            mgd = driver("probe_parallel_external", cfg, plant=farm)
+            state = mgd.init(params)
+            w0 = np.asarray(jax.tree_util.tree_leaves(params)[1])[0, 0]
+            samples = []
+            for t in range(rounds):
+                new_params, _, _ = mgd.step(params,
+                                            replace_step(state, t), batch)
+                w1 = np.asarray(
+                    jax.tree_util.tree_leaves(new_params)[1])[0, 0]
+                samples.append((w1 - w0) / cfg.eta)   # one ĝ component
+            variances[k] = float(np.var(samples))
+            rows.append({
+                "bench": "farm_scaling",
+                "name": f"ghat_variance_{flavor}_k{k}",
+                "value": variances[k],
+                "detail": f"{rounds} frozen-param steps; {flavor} chips "
+                          f"{chip_kw}",
+            })
+        for k in ks[1:]:
+            rows.append({
+                "bench": "farm_scaling",
+                "name": f"variance_ratio_{flavor}_k{k}",
+                "value": (variances[ks[0]] / variances[k]
+                          if variances[k] else -1),
+                "detail": f"var(k=1)/var(k={k}) — ≈{k} if variance ∝ 1/k",
+            })
+    return rows
+
+
+def _convergence_rows(ks, steps, seed, n_seeds):
+    """nist7x7 accuracy (mean on-chip readout across the farm) after a
+    fixed step budget, vs farm size."""
+    rows = []
+    xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
+    eval_batch = {"x": np.asarray(xe), "y": np.asarray(ye)}
+    for k in ks:
+        # the k-averaged error signal has 1/k the variance, so it
+        # tolerates a proportionally larger step — η = 0.125·k (the
+        # linear-scaling rule; at fixed η=0.1 the diverse-chip consensus
+        # objective converges k-times slower instead)
+        cfg = DriverConfig(dtheta=2e-2, eta=0.125 * k, mode="central",
+                           seed=seed)
+        accs = []
+        for s in range(seed, seed + n_seeds):
+            farm = simulated_chip_farm(k, (49, 4, 4), base_seed=100 * s,
+                                       sigma_a=0.15, sigma_theta=0.01,
+                                       sigma_c=1e-4)
+            params = mlp_init(jax.random.PRNGKey(s), (49, 4, 4))
+            res = train_mgd(
+                None, params, cfg.replace(seed=s),
+                generator_sampler(tasks.nist7x7_batch, 8, seed=11 + s),
+                steps, algorithm="probe_parallel_external", plant=farm,
+                chunk=max(steps // 4, 1), log=None)
+            accs.append(farm.measure_accuracy(res.params, eval_batch))
+        rows.append({
+            "bench": "farm_scaling", "name": f"nist7x7_k{k}_accuracy",
+            "value": median(accs),
+            "detail": f"median of {n_seeds} farms, {steps} steps, "
+                      f"eta=0.125k, mean on-chip readout",
+        })
+    return rows
+
+
+def _latency_rows(ks):
+    """Projected wall-clock for 1e4 steps on HW1-style chips (1 ms cost
+    read): k serial probes on one chip vs one concurrent farm pair."""
+    rows = []
+    for k in ks:
+        serial = PlantMeta(name="HW1-serial", read_latency_s=1e-3,
+                           external=True)
+        farm = PlantMeta(name=f"HW1-farm-{k}", read_latency_s=1e-3,
+                         external=True, chips=k)
+        rows.append({
+            "bench": "farm_scaling", "name": f"projected_1e4steps_k{k}_s",
+            "value": 1e4 * farm.step_latency_s(reads_per_step=2,
+                                               writes_per_step=0),
+            "detail": f"farm: 2 concurrent reads/step; serial k-probe "
+                      f"chip would need "
+                      f"{1e4 * serial.step_latency_s(2 * k, 0):.0f}s",
+        })
+    return rows
+
+
+def run(seed: int = 0, smoke: bool = False):
+    ks = (1, 2, 4) if smoke else KS
+    rounds = 24 if smoke else 192
+    steps = 300 if smoke else 3000
+    rows = _variance_rows(ks, rounds, seed)
+    rows += _convergence_rows(ks, steps, seed, 1 if smoke else N_SEEDS)
+    rows += _latency_rows(ks)
+    return rows

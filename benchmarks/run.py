@@ -28,18 +28,25 @@ BENCHES = [
     "table3_hardware",
     "hardware_plants",
     "fused_probe",
+    "farm_scaling",
     "roofline_report",
 ]
 
 
-def _call_run(mod, seed):
+def _call_run(mod, seed, smoke=False):
     """Benchmarks that take run(seed=...) get the harness seed; the rest
     keep their built-in seed grids (their statistics are seed-medians
-    already).  Returns (rows, seed_used) — None when the benchmark
-    ignores the flag, so artifacts never claim a seed that wasn't used."""
-    if "seed" in inspect.signature(mod.run).parameters:
-        return mod.run(seed=seed), seed
-    return mod.run(), None
+    already).  ``--smoke`` likewise forwards smoke=True only to
+    benchmarks that declare it (reduced grids for CI).  Returns
+    (rows, seed_used) — None when the benchmark ignores the flag, so
+    artifacts never claim a seed that wasn't used."""
+    params = inspect.signature(mod.run).parameters
+    kwargs = {}
+    if "seed" in params:
+        kwargs["seed"] = seed
+    if smoke and "smoke" in params:
+        kwargs["smoke"] = True
+    return mod.run(**kwargs), kwargs.get("seed")
 
 
 def main(argv=None) -> int:
@@ -51,6 +58,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed forwarded to benchmarks that accept "
                          "run(seed=...)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="forward smoke=True to benchmarks that accept it "
+                         "(reduced grids for CI)")
     ap.add_argument("--out", default="artifacts/bench")
     args = ap.parse_args(argv)
 
@@ -76,7 +86,7 @@ def main(argv=None) -> int:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         try:
-            rows, seed_used = _call_run(mod, args.seed)
+            rows, seed_used = _call_run(mod, args.seed, smoke=args.smoke)
         except Exception as e:    # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc(limit=5, file=sys.stderr)

@@ -11,4 +11,8 @@ python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
     tests/test_driver_api.py
 python -m benchmarks.run --list
 python -m benchmarks.run --only fused_probe --seed 0 --out artifacts/bench
+# chip farm: host-thread probe fan-out exercised on every PR
+python -m benchmarks.run --only farm_scaling --smoke --seed 0 \
+    --out artifacts/bench
+python examples/chip_in_the_loop.py --chips 4 --steps 300 --eval-every 150
 echo "smoke OK"

@@ -7,52 +7,99 @@ noise (σ_θ) and cost-readout noise (σ_C) that the trainer never models —
 exactly the regime where backprop-through-a-model fails (the paper cites
 a 97.6% → 63.9% accuracy drop on transfer) and model-free MGD shines.
 
-The trainer side is the SAME ``repro.driver("discrete", ...)`` that
-drives every in-process device: ``ExternalPlant`` lowers each cost read
-to an ordered host callback (set_params → present batch → measure_cost),
-so the optimizer has no access to device internals at all — swap the
-``SimulatedAnalogChip`` for a serial-port driver with the same two
-methods and nothing else changes.
+The trainer side is the SAME ``repro.driver(...)`` registry that drives
+every in-process device:
+
+* ``--chips 1`` (default): one chip behind ``ExternalPlant`` driven by
+  the discrete central-difference driver — each cost read is an ordered
+  host callback (set_params → present batch → measure_cost).
+* ``--chips k``: a FARM of k simulated chips with distinct device seeds
+  (different defect draws, different noise streams) behind ``ChipFarm``,
+  driven by ``repro.driver("probe_parallel_external", ...)`` — k probes
+  evaluate concurrently on the k instruments and the trainer averages
+  the k error scalars (paper §6's farm picture; variance ∝ 1/k at the
+  wall-clock of a single chip).
+
+Swap ``SimulatedAnalogChip`` for a serial-port driver with the same
+two/three methods and nothing else changes.
 
     PYTHONPATH=src python examples/chip_in_the_loop.py
+    PYTHONPATH=src python examples/chip_in_the_loop.py --chips 4
 """
+import argparse
+
 import jax
 
 import repro
 from repro.data.tasks import nist7x7_batch
-from repro.hardware import ExternalPlant, SimulatedAnalogChip
+from repro.hardware import (ExternalPlant, SimulatedAnalogChip,
+                            simulated_chip_farm)
 from repro.models.simple import mlp_init
 
+SIZES = (49, 4, 4)
 
-def main():
-    chip = SimulatedAnalogChip((49, 4, 4), seed=0, sigma_a=0.15,
-                               sigma_theta=0.01, sigma_c=1e-4)
-    plant = ExternalPlant(chip)
 
-    # the trainer's view: parameters it *believes* are on the chip
-    params = mlp_init(jax.random.PRNGKey(1), (49, 4, 4))
-    # central mode: the external plant's ordered host callbacks need the
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=int, default=1,
+                    help="farm size k (1 = single chip via ExternalPlant)")
+    ap.add_argument("--steps", type=int, default=4001,
+                    help="training iterations")
+    ap.add_argument("--eval-every", type=int, default=800,
+                    help="on-chip accuracy readout period")
+    ap.add_argument("--eta", type=float, default=None,
+                    help="learning rate (default: 0.1 single chip; "
+                         "0.125·k for a farm — the k-averaged error "
+                         "signal has 1/k the variance, so it supports a "
+                         "proportionally larger step)")
+    args = ap.parse_args(argv)
+    eta = args.eta if args.eta is not None else (
+        0.1 if args.chips == 1 else 0.125 * args.chips)
+
+    # central mode: external plants' ordered host callbacks need the
     # cond-free step (forward mode's C₀ refresh is a lax.cond).
-    cfg = repro.DriverConfig(dtheta=2e-2, eta=0.1, tau_theta=1,
+    cfg = repro.DriverConfig(dtheta=2e-2, eta=eta, tau_theta=1,
                              mode="central", seed=0)
-    mgd = repro.driver("discrete", cfg, plant=plant)
+    if args.chips == 1:
+        chip = SimulatedAnalogChip(SIZES, seed=0, sigma_a=0.15,
+                                   sigma_theta=0.01, sigma_c=1e-4)
+        plant = ExternalPlant(chip)
+        mgd = repro.driver("discrete", cfg, plant=plant)
+
+        def accuracy(params, batch):
+            chip.set_params(params)      # commit the belief, then read out
+            return chip.measure_accuracy(batch)
+
+        def writes():
+            return chip.writes
+    else:
+        farm = simulated_chip_farm(args.chips, SIZES, base_seed=0,
+                                   sigma_a=0.15, sigma_theta=0.01,
+                                   sigma_c=1e-4)
+        mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
+        accuracy = farm.measure_accuracy
+
+        def writes():
+            return farm.total_writes
+
+    # the trainer's view: parameters it *believes* are on the chip(s)
+    params = mlp_init(jax.random.PRNGKey(1), SIZES)
     state = mgd.init(params)
     step_fn = jax.jit(mgd.step)
 
     key = jax.random.PRNGKey(7)
-    for it in range(4001):
+    for it in range(args.steps):
         key, kb = jax.random.split(key)
         x, y = nist7x7_batch(kb, 8)
         params, state, metrics = step_fn(params, state, {"x": x, "y": y})
         jax.block_until_ready(params)   # chip I/O is synchronous anyway
-        if it % 800 == 0:
+        if it % args.eval_every == 0:
             xe, ye = nist7x7_batch(jax.random.PRNGKey(99), 256)
-            chip.set_params(params)      # commit the belief, then read out
-            acc = chip.measure_accuracy({"x": xe, "y": ye})
+            acc = accuracy(params, {"x": xe, "y": ye})
             print(f"iter {it:5d}: on-chip cost {float(metrics['cost']):.4f} "
-                  f"accuracy {acc:.3f} (param writes: {chip.writes})")
-    print("trained through the opaque interface only — no gradients, no "
-          "defect model, no weight readback.")
+                  f"accuracy {acc:.3f} (param writes: {writes()})")
+    print(f"trained {args.chips} chip(s) through the opaque interface only "
+          "— no gradients, no defect model, no weight readback.")
 
 
 if __name__ == "__main__":

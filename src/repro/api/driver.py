@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 Pytree = Any
 
-ALGORITHMS = ("discrete", "analog", "probe_parallel")
+ALGORITHMS = ("discrete", "analog", "probe_parallel",
+              "probe_parallel_external")
 
 
 # ---------------------------------------------------------------------------
@@ -113,8 +114,7 @@ _ANALOG_ONLY = {"tau_hp": 100.0, "dt": 1.0}
 
 
 def _reject_foreign(cfg: DriverConfig, algorithm: str) -> None:
-    foreign = _ANALOG_ONLY if algorithm in ("discrete", "probe_parallel") \
-        else _DISCRETE_ONLY
+    foreign = _DISCRETE_ONLY if algorithm == "analog" else _ANALOG_ONLY
     section = "analog" if foreign is _ANALOG_ONLY else "discrete"
     for field, default in foreign.items():
         if getattr(cfg, field) != default:
@@ -267,8 +267,10 @@ def driver(algorithm: str, cfg=None, loss_fn: Optional[Callable] = None, *,
     """Construct any MGD algorithm behind the uniform driver contract.
 
     ``algorithm`` is one of ``"discrete"`` (paper Algorithm 1, incl. the
-    fused Pallas path), ``"analog"`` (Algorithm 2), or
-    ``"probe_parallel"`` (pod-level probe averaging; needs ``mesh``).
+    fused Pallas path), ``"analog"`` (Algorithm 2), ``"probe_parallel"``
+    (pod-level probe averaging; needs ``mesh``), or
+    ``"probe_parallel_external"`` (the same averaged update over k
+    external chips; needs ``plant=ChipFarm(...)``).
     ``cfg`` is a ``DriverConfig`` (or the algorithm's legacy config —
     accepted for migration) and ``loss_fn(params, batch) -> cost`` is the
     model interface; with an explicit ``plant`` it may be None (the plant
@@ -383,6 +385,57 @@ def _build_probe_parallel(cfg, loss_fn, *, plant=None, probe_fn=None,
 
     return MGDDriver(init=init, step=step, algorithm="probe_parallel",
                      config=mcfg, tau_x=mcfg.tau_x, plant=plant)
+
+
+@register_driver("probe_parallel_external")
+def _build_probe_parallel_external(cfg, loss_fn, *, plant=None, probe_fn=None,
+                                   mesh=None, total_params=None) -> MGDDriver:
+    """Probe-parallel MGD over k EXTERNAL chips (the §6 chip farm): the
+    same averaged update as ``probe_parallel``, fanned out host-side to a
+    ``hardware.farm.ChipFarm`` instead of a mesh axis."""
+    from repro.core.probe_parallel import build_probe_parallel_external_step
+    from repro.hardware.farm import ChipFarm
+
+    if mesh is not None:
+        raise ValueError("probe_parallel_external fans probes out host-side "
+                         "— a mesh only parameterizes "
+                         "repro.driver('probe_parallel', ...)")
+    if probe_fn is not None:
+        raise ValueError("probe_parallel_external has no fused probe path — "
+                         "the chips evaluate their own probes behind the "
+                         "host boundary")
+    if not isinstance(plant, ChipFarm):
+        raise ValueError("repro.driver('probe_parallel_external', ...) needs "
+                         "plant=ChipFarm(...) — k external chips behind one "
+                         "host boundary (repro.hardware.simulated_chip_farm "
+                         "builds a reference farm)")
+    if loss_fn is not None:
+        raise ValueError("probe_parallel_external has no in-process loss — "
+                         "the chips ARE the cost oracle; pass loss_fn=None")
+    if isinstance(cfg, DriverConfig) and cfg.probes != 1:
+        raise ValueError(f"probes={cfg.probes} conflicts with "
+                         "probe_parallel_external: the probe count IS the "
+                         "farm size — leave probes=1")
+    mcfg = as_mgd_config(cfg)
+    if mcfg.tau_theta != 1 or mcfg.replay or mcfg.staleness:
+        raise ValueError("probe_parallel_external updates every step "
+                         "(tau_theta=1, no replay/staleness) — temporal "
+                         "integration composes at the driver level, not "
+                         "across the host boundary")
+    raw = build_probe_parallel_external_step(mcfg, plant)
+
+    def init(params):
+        return ProbeParallelState(step=jnp.zeros((), jnp.int32))
+
+    def step(params, state, batch):
+        params, m = raw(params, state.step, batch)
+        aux = _standard_aux(m, m["c_tilde_mean"], mcfg.dtheta)
+        aux["c_tilde"] = m["c_tilde_mean"]
+        return params, ProbeParallelState(step=state.step + 1), aux
+
+    return MGDDriver(init=init, step=step,
+                     algorithm="probe_parallel_external", config=mcfg,
+                     tau_x=mcfg.tau_x, plant=plant)
 
 
 # ---------------------------------------------------------------------------

@@ -426,12 +426,16 @@ def build_mgd_step(
         s = _pin(c_tilde * inv_d2)     # mirrors tree_scale's f32 scalar
 
         def small(leaf, lid):
-            theta = pert.rademacher_leaf(
-                leaf.shape, leaf.dtype, lid, step=n, seed=seed,
-                dtheta=cfg.dtheta, tau_p=cfg.tau_p)
-            e = (theta.astype(jnp.float32) * s).astype(theta.dtype)
-            return (leaf.astype(jnp.float32)
-                    + (-cfg.eta) * e.astype(jnp.float32)).astype(leaf.dtype)
+            # sign-LAST form of leaf + (−η)·(θ̃·s): bit-identical (the ±1
+            # sign commutes exactly through both roundings) and immune to
+            # mul+add FMA contraction — see the sign_exact_update note in
+            # the materializing step below and kernels/mgd_update.py.
+            signs = pert.rademacher_leaf(
+                leaf.shape, jnp.float32, lid, step=n, seed=seed,
+                dtheta=1.0, tau_p=cfg.tau_p)
+            t = _pin(jnp.float32(-cfg.eta)
+                     * _pin(jnp.float32(cfg.dtheta) * s))
+            return (leaf.astype(jnp.float32) + signs * t).astype(leaf.dtype)
 
         def lseeds_of(lid):
             return pert.leaf_seed(seed, n // jnp.int32(cfg.tau_p), lid)[None]
@@ -517,8 +521,41 @@ def build_mgd_step(
     if cfg.fused:
         return step_fn_fused
 
+    # τ_θ = 1 rademacher updates take a contraction-immune form: the CPU
+    # backend may contract θ̃·s into the following add (one rounding instead
+    # of two) once the η = 1 multiply folds to a negation — and HLO
+    # optimization barriers are stripped before fusion, so no pin survives
+    # to block it.  θ − η·(C̃·θ̃/Δθ²) is rewritten as θ + sgn·t with the
+    # scalar t = (−η)·(Δθ·s) pinned at each rounding: sgn·t is an EXACT
+    # multiply (sgn = ±1), so FMA contraction cannot change the result,
+    # and the value is bit-identical (f32) to the written two-step
+    # association — and to the fused kernel's w + α·((Δθ·sgn)·s).
+    sign_exact_update = (cfg.tau_theta == 1 and cfg.probes == 1
+                         and not cfg.momentum and not cfg.replay
+                         and cfg.ptype == "rademacher")
+
     def step_fn(params, state: MGDState, batch):
         n = state.step
+        if sign_exact_update and all(
+                leaf.dtype == jnp.float32
+                for leaf in jax.tree_util.tree_leaves(params)):
+            c_tilde, _, c0, cost_metric = probe_once(params, state, batch, 0)
+            s = _pin(c_tilde * inv_d2)
+            t = _pin(jnp.float32(-cfg.eta)
+                     * _pin(jnp.float32(cfg.dtheta) * s))
+            signs = pert.generate_signs_only(
+                params, step=n, seed=_probe_seed(cfg, 0), tau_p=cfg.tau_p)
+            new_params = plant.write_params(
+                jax.tree_util.tree_map(lambda p, g_: p + g_ * t,
+                                       params, signs),
+                step=n, prev=params)
+            new_state = MGDState(
+                step=n + 1, c0=c0, g=None, replay_c=None, m=None,
+                metric_cost=cost_metric,
+            )
+            metrics = {"cost": cost_metric, "c_tilde": c_tilde,
+                       "updated": jnp.float32(1.0)}
+            return new_params, new_state, metrics
         e, c_tilde, c0, cost_metric = accumulate(params, state, batch)
         do_update = (n + 1) % cfg.tau_theta == 0
 

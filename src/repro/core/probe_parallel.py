@@ -34,6 +34,16 @@ from .mgd import MGDConfig
 from .utils import tree_axpy
 
 
+def pod_seed(seed, k):
+    """Probe seed of pod/chip ``k``: distinct, deterministic, uint32.
+    ONE definition — the mesh and external drivers' bit-equality (a farm
+    of ideal chips walks a k-pod mesh's trajectory) hangs on both using
+    the same derivation.  ``k`` may be traced (lax.axis_index /
+    fori_loop counter)."""
+    return (jnp.uint32(seed)
+            + jnp.asarray(k, jnp.uint32) * jnp.uint32(0x9E3779B9))
+
+
 def build_probe_parallel_step(
     loss_fn: Callable,
     cfg: MGDConfig,
@@ -67,19 +77,17 @@ def build_probe_parallel_step(
     plant = _resolve_plant(loss_fn, cfg, plant=plant)
     if plant.meta.external:
         raise ValueError("probe-parallel drives pure-JAX plants; an "
-                         "ExternalPlant cannot run inside shard_map "
-                         "(see ROADMAP: multi-chip probe parallelism)")
+                         "ExternalPlant cannot run inside shard_map — "
+                         "use repro.driver('probe_parallel_external', cfg, "
+                         "plant=ChipFarm(...)) for k chips behind a host "
+                         "boundary")
     n_pods = mesh.shape[probe_axis]
     inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
-
-    def pod_seed(pod_idx):
-        return (jnp.uint32(cfg.seed)
-                + jnp.asarray(pod_idx, jnp.uint32) * jnp.uint32(0x9E3779B9))
 
     def run(params, step, batch):
         pod = jax.lax.axis_index(probe_axis)
         theta = pert.generate(
-            params, ptype=cfg.ptype, step=step, seed=pod_seed(pod),
+            params, ptype=cfg.ptype, step=step, seed=pod_seed(cfg.seed, pod),
             dtheta=cfg.dtheta, tau_p=cfg.tau_p)
         c_plus, c_minus = plant.read_cost_pair(
             params, theta, batch, step=step, tag=2 * pod)
@@ -88,7 +96,7 @@ def build_probe_parallel_step(
 
         def body(k, p):
             signs = pert.generate(
-                p, ptype=cfg.ptype, step=step, seed=pod_seed(k),
+                p, ptype=cfg.ptype, step=step, seed=pod_seed(cfg.seed, k),
                 dtheta=cfg.dtheta, tau_p=cfg.tau_p)
             coef = -cfg.eta * inv_d2 * all_c[k] / n_pods
             return tree_axpy(coef, signs, p)
@@ -111,6 +119,70 @@ def build_probe_parallel_step(
     @jax.jit
     def step_fn(params, step, batch):
         return shard(params, jnp.asarray(step, jnp.int32), batch)
+
+    return step_fn
+
+
+def build_probe_parallel_external_step(
+    cfg: MGDConfig,
+    farm,
+):
+    """Build step_fn(params, step, batch) → (params, metrics) — the
+    registry's ``probe_parallel_external`` builder: the SAME averaged
+    update as ``build_probe_parallel_step``,
+
+        θ ← θ − η · (1/k) Σ_k C̃_k · θ̃_k / Δθ²,
+
+    but the k central-difference probes fan out to k EXTERNAL chips over
+    the host boundary (``hardware.farm.ChipFarm``: one ordered
+    ``io_callback`` per step gathers all 2k scalars, the chips evaluate
+    concurrently on a thread pool) instead of k shard_map mesh slices —
+    the paper §6 "farm of imperfect chips" picture.  All k sign-trees
+    are then regenerated locally (counter hash) and the update applied
+    with the identical float association as the mesh driver, so a farm
+    of k ideal chips and a k-pod mesh walk the same trajectory.
+
+    Chip k's probe seed is ``pod_seed(k)`` — the mesh driver's formula —
+    and its readout tags are (2k, 2k+1), so counter-keyed device noise
+    distinguishes every read and restarts replay deterministically.
+    """
+    from repro.hardware.farm import ChipFarm
+    if not isinstance(farm, ChipFarm):
+        raise TypeError(
+            f"probe_parallel_external needs a hardware.farm.ChipFarm "
+            f"(k external chips behind one host boundary); got "
+            f"{type(farm).__name__}")
+    if cfg.mode != "central":
+        raise ValueError(
+            f"probe-parallel uses central differences (its per-chip probe "
+            f"shares no C₀ memory); got mode={cfg.mode!r} — set "
+            f'mode="central"')
+    n_chips = farm.n_chips
+    inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
+
+    @jax.jit
+    def step_fn(params, step, batch):
+        step = jnp.asarray(step, jnp.int32)
+        thetas = [pert.generate(
+            params, ptype=cfg.ptype, step=step, seed=pod_seed(cfg.seed, k),
+            dtheta=cfg.dtheta, tau_p=cfg.tau_p) for k in range(n_chips)]
+        costs = farm.read_cost_pairs(params, thetas, batch,
+                                     step=step)             # [k, 2]
+        all_c = (0.5 * (costs[:, 0] - costs[:, 1])).astype(jnp.float32)
+
+        def body(k, p):
+            signs = pert.generate(
+                p, ptype=cfg.ptype, step=step, seed=pod_seed(cfg.seed, k),
+                dtheta=cfg.dtheta, tau_p=cfg.tau_p)
+            coef = -cfg.eta * inv_d2 * all_c[k] / n_chips
+            return tree_axpy(coef, signs, p)
+
+        new_params = farm.write_params(
+            jax.lax.fori_loop(0, n_chips, body, params),
+            step=step, prev=params)
+        cost = jnp.mean(0.5 * (costs[:, 0] + costs[:, 1]))
+        return new_params, {"cost": cost.astype(jnp.float32),
+                            "c_tilde_mean": jnp.mean(jnp.abs(all_c))}
 
     return step_fn
 

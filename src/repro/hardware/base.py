@@ -59,11 +59,16 @@ class PlantMeta:
     write_latency_s: float = 0.0     # τ per persistent parameter write
     read_latency_s: float = 0.0      # τ per cost readout (≈ τ_p floor)
     external: bool = False           # True → host-callback / process boundary
+    chips: int = 1                   # devices probed concurrently (chip farm)
 
     def step_latency_s(self, reads_per_step: int = 2,
                        writes_per_step: int = 1) -> float:
         """Projected seconds per MGD iteration on this device (Table 3
-        style: reads dominate; one amortized persistent write per τ_θ)."""
+        style: reads dominate; one amortized persistent write per τ_θ).
+        ``reads_per_step``/``writes_per_step`` count PER-CHIP operations:
+        a k-chip farm issues its k probe pairs concurrently, so the
+        wall-clock per step is one chip's latency while the C̃-estimator
+        variance drops ∝ 1/k (benchmarks/farm_scaling.py)."""
         return (reads_per_step * self.read_latency_s
                 + writes_per_step * self.write_latency_s)
 
@@ -90,7 +95,11 @@ class Plant:
                        step, tag: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Antithetic readout (C(θ+θ̃), C(θ−θ̃)).  The default issues two
         independent reads with consecutive tags — bit-identical to the
-        historical inlined central-difference path."""
+        historical inlined central-difference path.  Devices with a
+        cheaper paired readout override: the Pallas pair kernel reads
+        each W tile once, and external devices with a differential probe
+        line (``measure_pair``) write the base θ once per pair instead
+        of two full perturbed trees (see ``external.py``)."""
         c_plus = self.read_cost(tree_add(params, theta), batch,
                                 step=step, tag=tag)
         c_minus = self.read_cost(tree_axpy(-1.0, theta, params), batch,

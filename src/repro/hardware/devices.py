@@ -83,14 +83,22 @@ class SimulatedAnalogChip:
     with fabrication defects, noisy analog writes and noisy readout.
 
     Nothing outside this class may see the defects or the internal
-    parameters — only ``set_params`` / ``measure_cost`` / the public
-    readouts, like a lab instrument.  Deliberately implemented in PURE
-    NUMPY: the instrument lives on the far side of the host-callback
-    boundary, and host callbacks that dispatch JAX ops can deadlock
-    against the in-flight XLA program that invoked them (two threads
-    feeding one CPU client).  Stateful and eager — writes mutate the
-    instrument, the noise stream is a live RNG the trainer cannot
-    replay.
+    parameters — only ``set_params`` / ``measure_cost`` /
+    ``measure_pair`` / the public readouts, like a lab instrument.
+    Deliberately implemented in PURE NUMPY: the instrument lives on the
+    far side of the host-callback boundary, and host callbacks that
+    dispatch JAX ops can deadlock against the in-flight XLA program that
+    invoked them (two threads feeding one CPU client).  Writes mutate
+    the instrument; READOUT noise is counter-keyed on the optimizer's
+    (step, tag) pair when provided, so the +/− probe reads of a central
+    pair draw distinct noise and a restarted run replays the identical
+    readout stream (write noise stays a live RNG — an analog memory has
+    no replayable write history).
+
+    ``measure_pair`` is the differential probe line: θ̃ is applied
+    transiently at the parameter (paper's dedicated-perturbation-line /
+    LFSR-per-synapse picture), so a central pair costs ONE persistent
+    base-θ write instead of two full perturbed-tree writes.
     """
 
     def __init__(self, sizes: Sequence[int] = (49, 4, 4), *, seed: int = 0,
@@ -107,6 +115,7 @@ class SimulatedAnalogChip:
              sigma_a * rng.standard_normal(n))
             for n in sizes[1:]
         ]
+        self._seed = int(seed)
         self._sigma_theta = sigma_theta
         self._sigma_c = sigma_c
         self._params = None
@@ -125,20 +134,49 @@ class SimulatedAnalogChip:
                            np.shape(w)).astype(np.float32)),
             params)
 
-    def _forward(self, x):
+    def _forward(self, x, params=None):
         h = np.asarray(x, np.float32)
-        for (a, b, a0, b0), layer in zip(self._defects, self._params):
+        for (a, b, a0, b0), layer in zip(
+                self._defects, self._params if params is None else params):
             z = h @ layer["w"]
             if "b" in layer:
                 z = z + layer["b"]
             h = a / (1.0 + np.exp(-b * (z - a0))) + b0
         return h
 
-    def measure_cost(self, batch):
-        """Scalar cost readout (MSE) with measurement noise."""
-        err = self._forward(batch["x"]) - np.asarray(batch["y"], np.float32)
+    def _readout_noise(self, step, tag):
+        """One standard normal per readout.  Counter-keyed on
+        (device seed, step, tag) when the optimizer supplies them —
+        deterministic across restarts and distinguishing the +/− probe
+        reads — else drawn from the live instrument RNG."""
+        if step is None or tag is None:
+            return float(self._rng.standard_normal())
+        rng = np.random.default_rng((self._seed, int(step), int(tag)))
+        return float(rng.standard_normal())
+
+    def _cost(self, params, batch, step, tag):
+        err = self._forward(batch["x"], params) - np.asarray(
+            batch["y"], np.float32)
         c = float(np.mean(err * err))
-        return c + self._sigma_c * float(self._rng.standard_normal())
+        return c + self._sigma_c * self._readout_noise(step, tag)
+
+    def measure_cost(self, batch, *, step=None, tag=None):
+        """Scalar cost readout (MSE) with measurement noise."""
+        return self._cost(None, batch, step, tag)
+
+    def measure_pair(self, theta, batch, *, step=None, tag=None):
+        """Differential probe readout (C(θ+θ̃), C(θ−θ̃)): θ̃ rides the
+        transient probe line on top of the stored (write-noisy) θ; each
+        half is a separate physical conversion with its own readout
+        noise (consecutive tags, like the base-class two-read path)."""
+        stored = self._params
+        plus = jax.tree_util.tree_map(
+            lambda w, t: w + np.asarray(t, np.float32), stored, theta)
+        minus = jax.tree_util.tree_map(
+            lambda w, t: w - np.asarray(t, np.float32), stored, theta)
+        tag2 = None if tag is None else tag + 1
+        return (self._cost(plus, batch, step, tag),
+                self._cost(minus, batch, step, tag2))
 
     def measure_accuracy(self, batch):
         """Classification readout (evaluation harness only — the

@@ -15,6 +15,20 @@ internals — defects, write noise and readout noise all live in the host
 object (paper §4/§6: the regime where backprop-through-a-model breaks
 and model-free MGD does not).
 
+Two optional device capabilities refine the boundary:
+
+* ``measure_cost(batch, *, step, tag)`` — devices whose readout noise is
+  counter-keyed accept the optimizer's (step, tag) pair, so the +/−
+  probe reads of a central pair are distinguishable and a restarted run
+  replays the identical noise stream.  The signature is inspected ONCE
+  at construction; plain 1-arg devices keep working unchanged.
+* ``measure_pair(theta, batch, *, step, tag) -> (C₊, C₋)`` — a
+  differential probe line: the perturbation θ̃ is applied transiently at
+  the parameter (the paper's dedicated-perturbation-line picture), never
+  through the persistent write path.  ``read_cost_pair`` then costs ONE
+  ``set_params`` of the base θ per central pair instead of two full
+  writes of the perturbed tree, in a single host round-trip.
+
 Ordered callbacks sequence the host I/O with program order but are not
 allowed inside ``lax.cond`` branches, so external plants run the one
 cond-free MGD step: ``MGDConfig(mode="central", tau_theta=1)`` without
@@ -28,6 +42,7 @@ feeding one CPU client) — see ``devices.SimulatedAnalogChip``.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Optional
 
 import jax
@@ -42,29 +57,82 @@ except ImportError:                     # pragma: no cover - old jax
     _io_callback = None
 
 
+def accepts_counters(fn) -> bool:
+    """True when ``fn`` accepts the optimizer's ``step``/``tag`` keywords
+    (directly or through **kwargs).  Inspected once at plant construction
+    — a per-read signature probe would sit on the training hot loop."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):     # builtins/C callables: be safe
+        return False
+    if any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True
+    return "step" in params and "tag" in params
+
+
+def check_device(device: Any) -> None:
+    """Validate the minimal lab-instrument surface of ``device``."""
+    for attr in ("set_params", "measure_cost"):
+        if not callable(getattr(device, attr, None)):
+            raise TypeError(
+                f"external device must expose {attr}(); got "
+                f"{type(device).__name__}")
+
+
 class ExternalPlant(Plant):
     """Host-callback boundary around an opaque device object."""
 
     def __init__(self, device: Any, *, meta: Optional[PlantMeta] = None):
-        for attr in ("set_params", "measure_cost"):
-            if not callable(getattr(device, attr, None)):
-                raise TypeError(
-                    f"external device must expose {attr}(); got "
-                    f"{type(device).__name__}")
+        check_device(device)
         if _io_callback is None:        # pragma: no cover - old jax
             raise RuntimeError("ExternalPlant needs jax.experimental."
                                "io_callback (jax >= 0.4.9)")
         self.device = device
+        # capability inspection happens here, once — not per read
+        self._measure_counters = accepts_counters(device.measure_cost)
+        pair = getattr(device, "measure_pair", None)
+        self._measure_pair = pair if callable(pair) else None
+        self._pair_counters = (self._measure_pair is not None
+                               and accepts_counters(self._measure_pair))
         self.meta = meta or PlantMeta(name="external", external=True)
 
-    def _host_read(self, params, batch):
+    def _host_read(self, params, batch, step, tag):
         self.device.set_params(params)
+        if self._measure_counters:
+            return np.float32(self.device.measure_cost(
+                batch, step=int(step), tag=int(tag)))
         return np.float32(self.device.measure_cost(batch))
 
     def read_cost(self, params, batch, *, step, tag: int = 0):
         return _io_callback(
             self._host_read, jax.ShapeDtypeStruct((), jnp.float32),
-            params, batch, ordered=True)
+            params, batch, jnp.asarray(step, jnp.int32),
+            jnp.asarray(tag, jnp.int32), ordered=True)
+
+    def _host_read_pair(self, params, theta, batch, step, tag):
+        # ONE persistent write of the base θ; the antithetic pair rides
+        # the device's transient probe line (no second full-tree write).
+        self.device.set_params(params)
+        if self._pair_counters:
+            c_plus, c_minus = self._measure_pair(
+                theta, batch, step=int(step), tag=int(tag))
+        else:
+            c_plus, c_minus = self._measure_pair(theta, batch)
+        return np.asarray([c_plus, c_minus], np.float32)
+
+    def read_cost_pair(self, params, theta, batch, *, step, tag: int = 0):
+        """Antithetic readout C(θ±θ̃).  Devices with a differential probe
+        line (``measure_pair``) pay one base-θ write and one host round
+        trip per pair; plain devices fall back to the base class's two
+        independent reads (two full perturbed-tree writes)."""
+        if self._measure_pair is None:
+            return super().read_cost_pair(params, theta, batch,
+                                          step=step, tag=tag)
+        out = _io_callback(
+            self._host_read_pair, jax.ShapeDtypeStruct((2,), jnp.float32),
+            params, theta, batch, jnp.asarray(step, jnp.int32),
+            jnp.asarray(tag, jnp.int32), ordered=True)
+        return out[0], out[1]
 
     def _host_write(self, params):
         self.device.set_params(params)

@@ -1,0 +1,209 @@
+"""Chip farm: k external chips evaluating k probes concurrently (§6).
+
+The paper's deployment endgame is a *farm of imperfect chips*: k devices,
+each with its own fabrication defects and noise, each evaluating its own
+perturbation probe, with the trainer averaging the k scalar error signals
+
+    θ ← θ − η · (1/k) Σ_k C̃_k · θ̃_k / Δθ²
+
+— k× probe-variance reduction at zero extra per-chip work (Oripov et al.
+2025 show this axis is what makes perturbative training scale).  The
+pure-JAX version of that picture is ``core.probe_parallel`` (shard_map
+over a mesh axis); ``ChipFarm`` is the same math across a *process /
+instrument* boundary the optimizer cannot trace into:
+
+* ``read_cost_pairs(params, thetas, batch, step)`` lowers to ONE ordered
+  ``io_callback`` per step that fans the k central-difference pairs out
+  to the k devices on a thread pool and gathers all 2k cost scalars —
+  the only values that ever cross back.
+* Each chip sees the optimizer's (step, tag=2k/2k+1) counters when its
+  readout accepts them, so counter-keyed device noise distinguishes
+  every read and two identically-seeded runs are bit-identical.
+* Devices with a differential probe line (``measure_pair``) pay one
+  persistent base-θ write per pair; plain 2-method devices fall back to
+  two perturbed-tree writes (see ``external.py``).
+
+Everything host-side is NUMPY-PURE (JAX ops inside a host callback can
+deadlock the CPU client — see ``external.py``); each chip's noise is its
+own per-device stream, so the thread-pool schedule cannot perturb the
+trajectory.
+"""
+from __future__ import annotations
+
+import weakref
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Plant, PlantMeta
+from .devices import SimulatedAnalogChip
+from .external import _io_callback, accepts_counters, check_device
+
+
+def _np_axpy(sign, theta, params):
+    """params + sign·theta, host-side numpy (never dispatches JAX ops)."""
+    return jax.tree_util.tree_map(
+        lambda w, t: np.asarray(w, np.float32)
+        + np.float32(sign) * np.asarray(t, np.float32), params, theta)
+
+
+class ChipFarm(Plant):
+    """k opaque devices behind one host boundary, probed concurrently.
+
+    Driven exclusively by ``repro.driver("probe_parallel_external", cfg,
+    plant=farm)`` — the farm has no single-scalar ``read_cost`` (wrap one
+    device in ``ExternalPlant`` for the single-chip drivers).
+    """
+
+    def __init__(self, devices: Sequence[Any], *,
+                 meta: Optional[PlantMeta] = None,
+                 max_workers: Optional[int] = None):
+        devices = list(devices)
+        if not devices:
+            raise ValueError("ChipFarm needs at least one device")
+        for device in devices:
+            check_device(device)
+        if _io_callback is None:        # pragma: no cover - old jax
+            raise RuntimeError("ChipFarm needs jax.experimental."
+                               "io_callback (jax >= 0.4.9)")
+        self.devices = devices
+        # capability inspection once per device, never on the hot loop
+        self._caps = []
+        for device in devices:
+            pair = getattr(device, "measure_pair", None)
+            pair = pair if callable(pair) else None
+            self._caps.append({
+                "counters": accepts_counters(device.measure_cost),
+                "pair": pair,
+                "pair_counters": pair is not None and accepts_counters(pair),
+            })
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers or len(devices),
+            thread_name_prefix="chip-farm")
+        # reclaim the worker threads when the farm is garbage-collected —
+        # sweeps build many farms per process and idle non-daemon threads
+        # would otherwise accumulate until interpreter exit
+        self._finalizer = weakref.finalize(self, self._pool.shutdown,
+                                           wait=False)
+        self.meta = meta or PlantMeta(name=f"chip-farm-{len(devices)}",
+                                      external=True, chips=len(devices))
+
+    def close(self) -> None:
+        """Shut the thread pool down now (also runs at GC)."""
+        self._finalizer()
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.devices)
+
+    # -- host side (numpy-pure, runs on the callback + pool threads) --------
+
+    def _chip_pair(self, i, params, theta, batch, step):
+        """One chip's central pair → (C₊, C₋).  Tags (2i, 2i+1) mirror the
+        mesh driver's per-pod tag layout."""
+        device, caps = self.devices[i], self._caps[i]
+        tag = 2 * i
+        if caps["pair"] is not None:
+            device.set_params(params)          # ONE base-θ write per pair
+            if caps["pair_counters"]:
+                return caps["pair"](theta, batch, step=step, tag=tag)
+            return caps["pair"](theta, batch)
+        # plain 2-method device: two perturbed writes + two reads
+        def read(perturbed, t):
+            device.set_params(perturbed)
+            if caps["counters"]:
+                return device.measure_cost(batch, step=step, tag=t)
+            return device.measure_cost(batch)
+        return (read(_np_axpy(1.0, theta, params), tag),
+                read(_np_axpy(-1.0, theta, params), tag + 1))
+
+    def _host_pairs(self, params, thetas, batch, step):
+        step = int(step)
+        futures = [
+            self._pool.submit(self._chip_pair, i, params, thetas[i],
+                              batch, step)
+            for i in range(self.n_chips)
+        ]
+        # gather in chip order — the schedule cannot reorder results
+        return np.asarray([f.result() for f in futures], np.float32)
+
+    def _host_write(self, params):
+        for f in [self._pool.submit(d.set_params, params)
+                  for d in self.devices]:
+            f.result()
+        return np.int32(0)
+
+    # -- traced side ---------------------------------------------------------
+
+    def read_cost_pairs(self, params, thetas, batch, *, step):
+        """All k chips' antithetic pairs in one ordered host round-trip.
+        ``thetas`` is the list of k perturbation trees (chip k probes its
+        own θ̃_k); returns an f32[k, 2] array of (C₊, C₋) per chip."""
+        if len(thetas) != self.n_chips:
+            raise ValueError(f"{len(thetas)} probe trees for "
+                             f"{self.n_chips} chips")
+        return _io_callback(
+            self._host_pairs,
+            jax.ShapeDtypeStruct((self.n_chips, 2), jnp.float32),
+            params, thetas, batch, jnp.asarray(step, jnp.int32),
+            ordered=True)
+
+    def read_cost(self, params, batch, *, step, tag: int = 0):
+        raise NotImplementedError(
+            "ChipFarm has no single-chip cost read — drive it with "
+            "repro.driver('probe_parallel_external', cfg, plant=farm), or "
+            "wrap one device in ExternalPlant for the single-chip drivers")
+
+    def write_params(self, params, *, step, prev=None):
+        """Commit the post-update parameters to EVERY chip (open-loop, as
+        in ``ExternalPlant``: per-chip write noise stays invisible)."""
+        _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
+                     params, ordered=True)
+        return params
+
+    # -- evaluation harness (eager, never inside the traced step) ------------
+
+    def measure_accuracy(self, params, batch) -> float:
+        """Mean on-chip accuracy across the farm after committing
+        ``params`` — the experimenter's bench readout, not training I/O."""
+        params = jax.tree_util.tree_map(
+            lambda x: np.asarray(x, np.float32), params)
+
+        def one(device):
+            device.set_params(params)
+            return device.measure_accuracy(batch)
+
+        futures = [self._pool.submit(one, d) for d in self.devices
+                   if callable(getattr(d, "measure_accuracy", None))]
+        if not futures:
+            raise NotImplementedError("no device exposes measure_accuracy")
+        return float(np.mean([f.result() for f in futures]))
+
+    @property
+    def total_writes(self) -> int:
+        """Summed ``writes`` counters of counting devices (test/telemetry)."""
+        return sum(int(getattr(d, "writes", 0)) for d in self.devices)
+
+
+def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
+                        base_seed: int = 0, sigma_a: float = 0.15,
+                        sigma_theta: float = 0.01, sigma_c: float = 1e-4,
+                        max_workers: Optional[int] = None) -> ChipFarm:
+    """A farm of k ``SimulatedAnalogChip``s with DISTINCT device seeds —
+    k different physical chips (different defect draws, different noise
+    streams), the same instrument replicated k× on the bench."""
+    if k < 1:
+        raise ValueError(f"need at least one chip, got k={k}")
+    devices = [
+        SimulatedAnalogChip(sizes, seed=base_seed + i, sigma_a=sigma_a,
+                            sigma_theta=sigma_theta, sigma_c=sigma_c)
+        for i in range(k)
+    ]
+    return ChipFarm(
+        devices, max_workers=max_workers,
+        meta=PlantMeta(name=f"sim-farm-{k}", cost_noise=sigma_c,
+                       write_noise=sigma_theta, sigma_a=sigma_a,
+                       external=True, chips=k))

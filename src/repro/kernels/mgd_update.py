@@ -107,13 +107,16 @@ def _window_kernel(lseeds_ref, coefs_ref, w_ref, o_ref, *,
 
     def body(t, w32):
         sgn = _index_signs(idx_g, lseeds_ref[t])
-        # association mirrors tree_scale→tree_axpy: α·((Δθ·sgn)·coef).
-        # The barrier pins the mul's own rounding step — without it XLA
-        # contracts mul+add into an FMA and the result drifts 1 ulp off
-        # the reference optimizer's two-rounding chain.
+        # association mirrors tree_scale→tree_axpy: α·((Δθ·sgn)·coef) =
+        # sgn·(α·(Δθ·coef)) exactly (sgn = ±1 commutes through both
+        # roundings), computed sign-LAST so the multiply feeding the add
+        # is exact — FMA contraction of mul+add then cannot move the
+        # result off the reference optimizer's two-rounding chain, and
+        # needs no barrier to survive fusion.  The scalar-chain barriers
+        # keep XLA from merging the α and Δθ constants into one factor.
         term = jax.lax.optimization_barrier(
-            alpha * ((dtheta * sgn) * coefs_ref[t]))
-        return w32 + term
+            alpha * jax.lax.optimization_barrier(dtheta * coefs_ref[t]))
+        return w32 + sgn * term
 
     w32 = jax.lax.fori_loop(
         0, window, body, w_ref[...].astype(jnp.float32)

@@ -12,8 +12,10 @@ perturbation sequence is a pure function of the global step and
 checkpoints carry the driver's FULL state pytree (whatever the algorithm
 keeps: G accumulator, momentum, replay window, filter memories), so a
 resumed run is the uninterrupted run.  The loop drives any
-``repro.hardware.Plant`` (ideal/noisy/quantized devices; external chips
-need the un-scanned per-step driver — see ``api.make_epoch``'s note).
+``repro.hardware.Plant``: pure-JAX devices scan ``chunk`` steps per
+program; external plants (``ExternalPlant``, ``ChipFarm`` — ordered host
+callbacks cannot ride lax.scan) fall back to per-step dispatch with the
+same sampler/checkpoint semantics.
 """
 from __future__ import annotations
 
@@ -142,12 +144,32 @@ def train_mgd(
         p, s, m = drv.step(p, s, batch)
         return (p, s), m
 
-    def make_runner(n):
-        @jax.jit
-        def run(p, s):
-            (p, s), ms = jax.lax.scan(body, (p, s), None, length=n)
-            return p, s, jax.tree_util.tree_map(lambda x: x[-1], ms)
-        return run
+    # External plants (ordered host callbacks — ExternalPlant, ChipFarm)
+    # cannot ride lax.scan on all jax versions; drive them step-by-step
+    # with the same τ_x sampler semantics.  Checkpoint/resume is identical
+    # either way: the state pytree carries the step counter and the
+    # device noise is counter-keyed, so a resumed farm run replays the
+    # uninterrupted trajectory.
+    external = bool(getattr(getattr(drv.plant, "meta", None),
+                            "external", False))
+    if external:
+        step_jit = jax.jit(drv.step)
+
+        def make_runner(n):
+            def run(p, s):
+                m = {}
+                for _ in range(n):
+                    batch = sample_fn(int(state_step(s)) // drv.tau_x)
+                    p, s, m = step_jit(p, s, batch)
+                return p, s, m
+            return run
+    else:
+        def make_runner(n):
+            @jax.jit
+            def run(p, s):
+                (p, s), ms = jax.lax.scan(body, (p, s), None, length=n)
+                return p, s, jax.tree_util.tree_map(lambda x: x[-1], ms)
+            return run
 
     runners = {}
     history = []

@@ -1,0 +1,346 @@
+"""Chip farm + ExternalPlant read-path contracts.
+
+Load-bearing:
+* ``ExternalPlant.read_cost`` forwards the optimizer's (step, tag)
+  counters to devices that accept them (the +/− probe reads of a
+  central pair are distinguishable; restarts replay deterministically);
+  plain 2-method devices keep working.
+* Devices with a differential probe line (``measure_pair``) pay ONE
+  persistent base-θ write per central pair instead of two full
+  perturbed-tree writes.
+* ``repro.driver("probe_parallel_external", cfg, plant=ChipFarm(...))``
+  trains through k external chips, is bit-deterministic across runs
+  (pod_seed-keyed probes + counter-keyed device noise), reduces the
+  C̃-estimator variance with k, and checkpoints/resumes through
+  ``train_mgd`` onto the uninterrupted trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import DriverConfig, driver, replace_step
+from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.data import tasks
+from repro.hardware import (ChipFarm, ExternalPlant, SimulatedAnalogChip,
+                            simulated_chip_farm)
+from repro.models.simple import mlp_init
+from repro.training.train_loop import train_mgd
+
+X, Y = tasks.xor_dataset()
+BATCH = {"x": X, "y": Y}
+
+
+def _params(seed=0, sizes=(2, 2, 1)):
+    return mlp_init(jax.random.PRNGKey(seed), sizes)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Instrumented fake devices
+# ---------------------------------------------------------------------------
+
+
+class RecordingDevice:
+    """Counter-capable 2-method device: records every (step, tag) its
+    readout sees and counts persistent writes.  Cost is a deterministic
+    function of the stored parameters so the driver math runs."""
+
+    def __init__(self):
+        self.writes = 0
+        self.calls = []          # (step, tag) per measure_cost
+        self._params = None
+
+    def set_params(self, params):
+        self.writes += 1
+        self._params = jax.tree_util.tree_map(
+            lambda w: np.asarray(w, np.float32), params)
+
+    def _cost(self, params):
+        return float(sum(np.sum(leaf * leaf) for leaf in
+                         jax.tree_util.tree_leaves(params)))
+
+    def measure_cost(self, batch, *, step=None, tag=None):
+        self.calls.append((step, tag))
+        return self._cost(self._params)
+
+
+class PairDevice(RecordingDevice):
+    """RecordingDevice + differential probe line."""
+
+    def __init__(self):
+        super().__init__()
+        self.pair_calls = []     # (step, tag) per measure_pair
+
+    def measure_pair(self, theta, batch, *, step=None, tag=None):
+        self.pair_calls.append((step, tag))
+        plus = jax.tree_util.tree_map(
+            lambda w, t: w + np.asarray(t, np.float32), self._params, theta)
+        minus = jax.tree_util.tree_map(
+            lambda w, t: w - np.asarray(t, np.float32), self._params, theta)
+        return self._cost(plus), self._cost(minus)
+
+
+class LegacyDevice:
+    """The historical 1-arg instrument surface — must keep working."""
+
+    def __init__(self):
+        self.writes = 0
+        self._params = None
+
+    def set_params(self, params):
+        self.writes += 1
+        self._params = jax.tree_util.tree_map(
+            lambda w: np.asarray(w, np.float32), params)
+
+    def measure_cost(self, batch):
+        return float(sum(np.sum(np.abs(leaf)) for leaf in
+                         jax.tree_util.tree_leaves(self._params)))
+
+
+def _central_cfg(**kw):
+    return MGDConfig(dtheta=1e-2, eta=0.1, mode="central", seed=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ExternalPlant read-path bugfixes
+# ---------------------------------------------------------------------------
+
+
+def test_read_cost_forwards_step_and_tag():
+    device = RecordingDevice()
+    plant = ExternalPlant(device)
+    c = plant.read_cost(_params(), BATCH, step=jnp.int32(7), tag=5)
+    assert np.isfinite(float(c))
+    assert device.calls == [(7, 5)]
+
+
+def test_pair_reads_get_distinct_tags_and_step():
+    """Default (no measure_pair) central pair: the two reads arrive with
+    consecutive tags and the true optimizer step — a counter-keyed
+    device can tell the +θ̃ read from the −θ̃ read."""
+    device = RecordingDevice()
+    plant = ExternalPlant(device)
+    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    p, s = _params(), mgd_init(_params(), _central_cfg())
+    for _ in range(3):
+        p, s, _ = step(p, s, BATCH)
+        jax.block_until_ready(p)
+    assert device.calls == [(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)]
+    # two perturbed probe writes + one update write per step
+    assert device.writes == 3 * 3
+
+
+def test_pair_capable_device_single_write_per_pair():
+    """measure_pair drops the probe writes per central pair from 2 full
+    perturbed trees to 1 base-θ write (plus the unchanged update
+    write): 3 writes/step → 2 writes/step."""
+    device = PairDevice()
+    plant = ExternalPlant(device)
+    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    p, s = _params(), mgd_init(_params(), _central_cfg())
+    n = 4
+    for _ in range(n):
+        p, s, _ = step(p, s, BATCH)
+        jax.block_until_ready(p)
+    assert device.writes == 2 * n
+    assert device.pair_calls == [(t, 0) for t in range(n)]
+    assert device.calls == []          # never fell back to single reads
+
+
+def test_legacy_two_arg_device_still_works():
+    device = LegacyDevice()
+    plant = ExternalPlant(device)
+    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    p, s = _params(), mgd_init(_params(), _central_cfg())
+    p, s, m = step(p, s, BATCH)
+    assert np.isfinite(float(m["cost"]))
+    assert device.writes == 3
+
+
+def test_sim_chip_readout_noise_counter_keyed():
+    """Same (step, tag) → the same readout draw (replay-deterministic);
+    different tag or step → a different draw; no counters → live RNG."""
+    chip = SimulatedAnalogChip((2, 2, 1), seed=3, sigma_a=0.0,
+                               sigma_theta=0.0, sigma_c=1.0)
+    chip.set_params(_params())
+    a = chip.measure_cost(BATCH, step=5, tag=0)
+    b = chip.measure_cost(BATCH, step=5, tag=0)
+    assert a == b
+    assert chip.measure_cost(BATCH, step=5, tag=1) != a
+    assert chip.measure_cost(BATCH, step=6, tag=0) != a
+    assert chip.measure_cost(BATCH) != chip.measure_cost(BATCH)
+
+
+def test_sim_chip_measure_pair_rides_probe_line():
+    """measure_pair perturbs transiently: no extra persistent write, and
+    the ± halves bracket the unperturbed readout."""
+    chip = SimulatedAnalogChip((2, 2, 1), seed=0, sigma_a=0.0,
+                               sigma_theta=0.0, sigma_c=0.0)
+    p = _params()
+    chip.set_params(p)
+    writes = chip.writes
+    theta = jax.tree_util.tree_map(lambda x: 0.01 * np.ones_like(x), p)
+    c_plus, c_minus = chip.measure_pair(theta, BATCH, step=0, tag=0)
+    assert chip.writes == writes          # no persistent write happened
+    assert c_plus != c_minus
+    assert np.isfinite([c_plus, c_minus]).all()
+
+
+# ---------------------------------------------------------------------------
+# ChipFarm + the probe_parallel_external driver
+# ---------------------------------------------------------------------------
+
+
+def test_farm_driver_trains_and_counts_writes():
+    farm = simulated_chip_farm(4, (2, 2, 1), base_seed=0, sigma_a=0.1,
+                               sigma_theta=0.005, sigma_c=1e-4)
+    cfg = DriverConfig(dtheta=2e-2, eta=0.5, mode="central", seed=0)
+    mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
+    p, s = _params(), mgd.init(_params())
+    costs = []
+    n = 60
+    for _ in range(n):
+        p, s, m = mgd.step(p, s, BATCH)
+        costs.append(float(m["cost"]))
+    assert np.isfinite(costs).all()
+    assert int(s.step) == n
+    # per step: 1 pair write + 1 update write, on each of the 4 chips
+    assert farm.total_writes == 2 * n * 4
+    assert np.mean(costs[-10:]) < np.mean(costs[:10])
+
+
+def test_farm_trajectories_bit_identical_across_runs():
+    """pod_seed-keyed probes + counter-keyed readout noise: two fresh,
+    identically-seeded farm runs walk the same f32 trajectory bit for
+    bit — the thread-pool schedule cannot perturb it."""
+    def run():
+        farm = simulated_chip_farm(3, (2, 2, 1), base_seed=5, sigma_a=0.1,
+                                   sigma_theta=0.01, sigma_c=1e-3)
+        cfg = DriverConfig(dtheta=1e-2, eta=0.5, mode="central", seed=2)
+        mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
+        p, s = _params(1), mgd.init(_params(1))
+        cts = []
+        for _ in range(10):
+            p, s, m = mgd.step(p, s, BATCH)
+            cts.append(np.asarray(m["c_tilde"]))
+        return p, np.array(cts)
+
+    p_a, ct_a = run()
+    p_b, ct_b = run()
+    np.testing.assert_array_equal(ct_a, ct_b)
+    _assert_trees_equal(p_a, p_b)
+
+
+def test_farm_variance_decreases_with_k():
+    """The averaged error signal is k independent probe estimates: its
+    variance at frozen params drops ≈1/k (k=4 ≤ 0.55× the k=1 var)."""
+    p = _params(3)
+    cfg = DriverConfig(dtheta=1e-2, eta=1.0, mode="central", seed=0)
+
+    def ghat_var(k, rounds=48):
+        # matched chips (no defects/write noise): the averaged estimator
+        # is k iid probe estimates, so the 1/k law is clean
+        farm = simulated_chip_farm(k, (2, 2, 1), base_seed=0, sigma_a=0.0,
+                                   sigma_theta=0.0, sigma_c=1e-3)
+        mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
+        s0 = mgd.init(p)
+        w0 = np.asarray(jax.tree_util.tree_leaves(p)[1])[0, 0]
+        samples = []
+        for t in range(rounds):
+            p1, _, _ = mgd.step(p, replace_step(s0, t), BATCH)
+            samples.append(np.asarray(
+                jax.tree_util.tree_leaves(p1)[1])[0, 0] - w0)
+        return float(np.var(samples))
+
+    v1, v4 = ghat_var(1), ghat_var(4)
+    assert v4 < 0.55 * v1, (v1, v4)
+
+
+def test_train_mgd_farm_checkpoint_resume(tmp_path):
+    """Resume == uninterrupted through the per-step external runner: the
+    farm state (ProbeParallelState counter) checkpoints generically and
+    counter-keyed chip noise replays (σ_θ = 0 chips: the only live-RNG
+    stream is silent)."""
+    def farm():
+        return simulated_chip_farm(2, (2, 2, 1), base_seed=1, sigma_a=0.1,
+                                   sigma_theta=0.0, sigma_c=1e-3)
+
+    cfg = DriverConfig(dtheta=1e-2, eta=0.5, mode="central", seed=4)
+    p0 = _params(2)
+    sample_fn = lambda i: BATCH                       # noqa: E731
+
+    cont = train_mgd(None, p0, cfg, sample_fn, 16,
+                     algorithm="probe_parallel_external", plant=farm(),
+                     chunk=4, log=None)
+    assert int(cont.state.step) == 16
+
+    train_mgd(None, p0, cfg, sample_fn, 8,
+              algorithm="probe_parallel_external", plant=farm(),
+              chunk=4, log=None, checkpoint_dir=str(tmp_path),
+              checkpoint_every=8)
+    res = train_mgd(None, p0, cfg, sample_fn, 16,
+                    algorithm="probe_parallel_external", plant=farm(),
+                    chunk=4, log=None, checkpoint_dir=str(tmp_path))
+    assert res.steps_done == 16
+    _assert_trees_equal(cont.params, res.params)
+    _assert_trees_equal(cont.state, res.state)
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+
+def test_farm_has_no_single_chip_read():
+    farm = simulated_chip_farm(2, (2, 2, 1))
+    with pytest.raises(NotImplementedError, match="probe_parallel_external"):
+        farm.read_cost(_params(), BATCH, step=0)
+
+
+def test_farm_rejects_empty_and_bad_devices():
+    with pytest.raises(ValueError, match="at least one"):
+        ChipFarm([])
+    with pytest.raises(TypeError, match="set_params"):
+        ChipFarm([object()])
+    with pytest.raises(ValueError, match="at least one chip"):
+        simulated_chip_farm(0)
+
+
+@pytest.mark.parametrize("build,match", [
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central")),
+     "ChipFarm"),
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central"), plant=farm,
+                         mesh="mesh"),
+     "host-side"),
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central"), lambda p, b: 0.0,
+                         plant=farm),
+     "cost oracle"),
+    (lambda farm: driver("probe_parallel_external", DriverConfig(),
+                         plant=farm),
+     "central"),
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central", probes=4), plant=farm),
+     "farm size"),
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central", tau_theta=4),
+                         plant=farm),
+     "tau_theta=1"),
+    (lambda farm: driver("probe_parallel_external",
+                         DriverConfig(mode="central"), plant=farm,
+                         probe_fn=lambda *a: None),
+     "fused"),
+])
+def test_farm_driver_validation(build, match):
+    farm = simulated_chip_farm(2, (2, 2, 1))
+    with pytest.raises((ValueError, TypeError), match=match):
+        build(farm)

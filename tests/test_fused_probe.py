@@ -34,12 +34,18 @@ def _run(cfg, steps=36):
     return np.array(cts), params
 
 
+@pytest.mark.parametrize("eta", [0.5, 1.0])
 @pytest.mark.parametrize("mode", ["forward", "central"])
 @pytest.mark.parametrize("window", [{}, {"replay": True, "tau_theta": 4}])
-def test_fused_bit_identical_mlp(mode, window):
+def test_fused_bit_identical_mlp(mode, window, eta):
     """≥32 MGD steps: C̃ sequence AND parameter trajectory bitwise equal
-    between fused=True (interpret kernels) and the materializing path."""
-    base = dict(mode=mode, dtheta=1e-2, eta=0.5, seed=3, **window)
+    between fused=True (interpret kernels) and the materializing path.
+    η = 1 is the historically broken corner: XLA folds the (−η)·
+    multiply to a negation, exposing θ̃·s to mul+add FMA contraction —
+    both update paths now multiply by the exact ±1 sign LAST, which no
+    contraction can re-round (core/mgd.py sign_exact_update,
+    kernels/mgd_update.py)."""
+    base = dict(mode=mode, dtheta=1e-2, eta=eta, seed=3, **window)
     c_mat, p_mat = _run(MGDConfig(**base))
     c_fus, p_fus = _run(MGDConfig(fused=True, kernel_impl="interpret",
                                   **base))

@@ -114,10 +114,10 @@ def test_fused_through_plant_matches_direct_probe_fn(mode):
     """cfg.fused reaches the kernels via Plant.apply_perturbed; handing
     probe_fn to the optimizer or to the plant is the same trajectory."""
     probe_fn = make_mlp_probe_fn()
-    # eta matches the PR-1 bit-equality contract configs (test_fused_probe):
-    # at eta=1.0 XLA folds (-eta)·e to a negation in one program only — a
-    # pre-existing one-ulp reassociation outside the pinned contract.
-    cfg = MGDConfig(dtheta=1e-2, eta=0.5, mode=mode, fused=True, seed=2,
+    # eta=1.0 deliberately: the historically broken corner (XLA folded
+    # (-eta)·e to a negation, exposing θ̃·s to FMA contraction) — fixed by
+    # the sign-last update forms; test_fused_probe pins both 0.5 and 1.0.
+    cfg = MGDConfig(dtheta=1e-2, eta=1.0, mode=mode, fused=True, seed=2,
                     kernel_impl="interpret")
     p_direct, ct_direct = _run_mgd(cfg, probe_fn=probe_fn)
     p_plant, ct_plant = _run_mgd(
@@ -269,8 +269,9 @@ def test_external_plant_trains_through_opaque_interface():
         p, s, m = step(p, s, BATCH)
         costs.append(float(m["cost"]))
     assert np.isfinite(costs).all()
-    # 2 probe writes + 1 update write per step went to the instrument
-    assert chip.writes == 3 * 60
+    # 1 base-θ pair write (the chip has a differential probe line) +
+    # 1 update write per step went to the instrument
+    assert chip.writes == 2 * 60
     # the trainer moved the needle on the *chip's* cost readout
     assert np.mean(costs[-10:]) < np.mean(costs[:10])
 

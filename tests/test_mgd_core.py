@@ -170,3 +170,30 @@ def test_update_only_every_tau_theta():
         changed = any(np.any(np.asarray(p[k]) != np.asarray(p_prev[k]))
                       for k in p)
         assert changed == (i == 4), f"step {i}: changed={changed}"
+
+
+def test_replay_tau1_keeps_replay_branch_and_state_structure():
+    """replay=True composes with tau_theta=1 (the bounded-staleness
+    configuration staleness>0 requires replay): the step must take the
+    replay branch, not the τ_θ=1 fast path — the fast path would drop
+    replay_c from the returned state pytree (breaking the lax.scan
+    carry) and consume the staleness-delayed C̃ at the wrong step."""
+    cfg = MGDConfig(dtheta=1e-2, eta=0.5, mode="central", replay=True,
+                    staleness=1, seed=0)
+    state = mgd_init(P0, cfg)
+    assert state.replay_c is not None
+    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    params, new_state, _ = step(P0, state, None)
+    # same pytree structure in and out — scan-compatible
+    assert jax.tree_util.tree_structure((P0, state)) == \
+        jax.tree_util.tree_structure((params, new_state))
+    assert new_state.replay_c.shape == (cfg.tau_theta + cfg.staleness,)
+
+    def body(carry, _):
+        p, s = carry
+        p, s, m = step(p, s, None)
+        return (p, s), m
+
+    (params, _), _ = jax.lax.scan(body, (P0, state), None, length=4)
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(params))
