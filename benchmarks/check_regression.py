@@ -1,0 +1,212 @@
+"""Bench-regression gate: fresh benchmark runs vs committed baselines.
+
+CI's ``bench-smoke`` job used to check only that the benchmarks *run*;
+the recorded numbers in ``artifacts/bench/*.json`` could rot silently.
+This checker turns them into a gate:
+
+    python -m benchmarks.check_regression \
+        --fresh artifacts/bench-fresh --baseline artifacts/bench
+
+compares every fresh metric that has a tolerance entry below against the
+committed baseline of the same (bench, name) and exits non-zero when any
+lands outside its band.  Metrics without an entry — wall-clock steps/s,
+machine-dependent timings — are reported informationally and never gate.
+Per-file, a gate that matches NO fresh metric at all is itself an error:
+renamed metrics must update the tolerance table, not silently un-gate.
+
+Directions: most checks are two-sided (a benchmark that suddenly doubles
+its variance is as suspicious as one that halves it); accuracy-style
+metrics gate only the drop (``direction="min"`` — improvements pass).
+
+``--self-test`` verifies the gate end-to-end without running a single
+benchmark: the baseline compared against itself must pass, and a
+baseline with one gated metric perturbed beyond tolerance must fail.
+CI runs it next to the real gate so a broken checker cannot pass green.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import math
+import os
+import sys
+import tempfile
+
+# (bench, metric-name glob, tolerance).  ``rel`` is a fraction of the
+# baseline magnitude, ``abs`` an absolute band; the allowance is their
+# max.  ``direction``: "both" (default) | "min" (gate drops only) |
+# "max" (gate rises only).  First match wins.
+TOLERANCES = [
+    # drift_aging — counter-keyed drift + fixed seeds: deterministic on a
+    # given jax; bands absorb cross-version RNG/codegen differences.
+    ("drift_aging", "retrim_hold_frac", dict(abs=0.04, direction="min")),
+    ("drift_aging", "driftfree_accuracy", dict(abs=0.10, direction="min")),
+    ("drift_aging", "acc_mgd_*", dict(abs=0.10, direction="min")),
+    ("drift_aging", "projected_*", dict(rel=0.01)),
+    # farm_scaling — the 1/k law and farm convergence
+    ("farm_scaling", "ghat_variance_*", dict(rel=0.75)),
+    ("farm_scaling", "variance_ratio_*", dict(rel=0.5)),
+    ("farm_scaling", "nist7x7_k*_accuracy", dict(abs=0.15, direction="min")),
+    ("farm_scaling", "projected_*", dict(rel=0.01)),
+    # fused_probe — only the arithmetic W-read identities gate; the
+    # steps/s rows are machine-dependent and stay informational
+    ("fused_probe", "*_wread_ratio", dict(rel=0.001)),
+    # full-suite extras (nightly / local full runs)
+    ("hardware_plants", "nist7x7_*_accuracy", dict(abs=0.10, direction="min")),
+    ("hardware_plants", "*_projected_s", dict(rel=0.01)),
+    ("table3_hardware", "*_seconds", dict(rel=0.01)),
+]
+
+
+def spec_for(bench: str, name: str):
+    for b, pattern, spec in TOLERANCES:
+        if b == bench and fnmatch.fnmatch(name, pattern):
+            return spec
+    return None
+
+
+def _band(spec, base):
+    allow = max(spec.get("abs", 0.0), spec.get("rel", 0.0) * abs(base))
+    direction = spec.get("direction", "both")
+    lo = base - allow if direction in ("both", "min") else -math.inf
+    hi = base + allow if direction in ("both", "max") else math.inf
+    return lo, hi
+
+
+def _rows(path):
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def compare_file(bench: str, fresh_rows, baseline_rows):
+    """Check one benchmark's fresh rows against its baseline rows.
+    Returns (violations, checked, findings) where findings are printable
+    (status, name, message) triples."""
+    base = {r["name"]: float(r["value"]) for r in baseline_rows}
+    findings, checked, violations = [], 0, 0
+    for row in fresh_rows:
+        name, value = row["name"], float(row["value"])
+        spec = spec_for(bench, name)
+        if spec is None:
+            findings.append(("info", name, f"{value:.6g} (ungated)"))
+            continue
+        if name not in base:
+            findings.append(("warn", name,
+                             f"{value:.6g} — no committed baseline "
+                             f"(new metric? commit a refreshed artifact)"))
+            continue
+        checked += 1
+        lo, hi = _band(spec, base[name])
+        if lo <= value <= hi:
+            findings.append(("ok", name,
+                             f"{value:.6g} in [{lo:.6g}, {hi:.6g}]"))
+        else:
+            violations += 1
+            findings.append(("FAIL", name,
+                             f"{value:.6g} outside [{lo:.6g}, {hi:.6g}] "
+                             f"(baseline {base[name]:.6g})"))
+    gated_in_baseline = sum(1 for n in base if spec_for(bench, n))
+    if checked == 0 and gated_in_baseline:
+        violations += 1
+        findings.append((
+            "FAIL", "<gate>",
+            f"no fresh metric matched any of the {gated_in_baseline} gated "
+            f"baseline metrics — renamed metrics must update "
+            f"check_regression.TOLERANCES"))
+    return violations, checked, findings
+
+
+def compare_dirs(fresh_dir: str, baseline_dir: str, verbose=True) -> int:
+    """Compare every benchmark JSON present in BOTH dirs; returns the
+    violation count (0 = gate passes)."""
+    fresh_files = sorted(f for f in os.listdir(fresh_dir)
+                         if f.endswith(".json"))
+    if not fresh_files:
+        print(f"check_regression: no fresh artifacts in {fresh_dir}",
+              file=sys.stderr)
+        return 1
+    total_violations = total_checked = 0
+    for fname in fresh_files:
+        bench = fname[:-len(".json")]
+        baseline_path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(baseline_path):
+            if verbose:
+                print(f"-- {bench}: no committed baseline, skipped")
+            continue
+        violations, checked, findings = compare_file(
+            bench, _rows(os.path.join(fresh_dir, fname)),
+            _rows(baseline_path))
+        total_violations += violations
+        total_checked += checked
+        if verbose:
+            print(f"-- {bench}: {checked} gated, {violations} regressed")
+            for status, name, msg in findings:
+                if status != "info" or os.environ.get("CHECK_REGRESSION_V"):
+                    print(f"   [{status:4s}] {name}: {msg}")
+    print(f"check_regression: {total_checked} metrics gated, "
+          f"{total_violations} regressed")
+    return total_violations
+
+
+def self_test(baseline_dir: str) -> int:
+    """Prove the gate can fail: baseline-vs-itself passes, and a copy
+    with one gated metric pushed beyond tolerance fails.  Returns 0 only
+    when both behave."""
+    if compare_dirs(baseline_dir, baseline_dir, verbose=False):
+        print("self-test FAILED: baseline does not pass against itself",
+              file=sys.stderr)
+        return 1
+    # find a gated metric to perturb
+    for fname in sorted(os.listdir(baseline_dir)):
+        if not fname.endswith(".json"):
+            continue
+        bench = fname[:-len(".json")]
+        with open(os.path.join(baseline_dir, fname)) as f:
+            payload = json.load(f)
+        for row in payload["rows"]:
+            spec = spec_for(bench, row["name"])
+            if spec is None:
+                continue
+            base = float(row["value"])
+            lo, hi = _band(spec, base)
+            bad = (lo - max(1.0, abs(base)) if math.isfinite(lo)
+                   else hi + max(1.0, abs(base)))
+            with tempfile.TemporaryDirectory() as tmp:
+                perturbed = dict(payload)
+                perturbed["rows"] = [
+                    dict(r, value=bad) if r["name"] == row["name"] else r
+                    for r in payload["rows"]]
+                with open(os.path.join(tmp, fname), "w") as f:
+                    json.dump(perturbed, f)
+                if not compare_dirs(tmp, baseline_dir, verbose=False):
+                    print(f"self-test FAILED: perturbing {bench}:"
+                          f"{row['name']} to {bad:.6g} was not caught",
+                          file=sys.stderr)
+                    return 1
+            print(f"self-test OK: identity passes; perturbed {bench}:"
+                  f"{row['name']} ({base:.6g} -> {bad:.6g}) fails as it "
+                  f"should")
+            return 0
+    print("self-test FAILED: no gated metric found in baseline dir",
+          file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="artifacts/bench-fresh",
+                    help="directory with the fresh benchmark JSONs")
+    ap.add_argument("--baseline", default="artifacts/bench",
+                    help="directory with the committed baseline JSONs")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate fails on a perturbed baseline "
+                         "(no benchmarks are run)")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test(args.baseline)
+    return 1 if compare_dirs(args.fresh, args.baseline) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,7 @@ BENCHES = [
     "hardware_plants",
     "fused_probe",
     "farm_scaling",
+    "drift_aging",
     "roofline_report",
 ]
 

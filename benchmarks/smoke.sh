@@ -1,18 +1,49 @@
 #!/usr/bin/env sh
 # CI-style smoke: kernel correctness + driver-API parity + fused-probe path
-# + one bench config, all on the CPU/interpret backend.  Run from the repo
+# + bench configs, all on the CPU/interpret backend.  Run from the repo
 # root:
 #   sh benchmarks/smoke.sh
-set -e
+#
+# Failure propagation is EXPLICIT: every step runs through `run`, which
+# exits with the failing command's status immediately — not an artifact
+# of `set -e` semantics, which differ across sh implementations (compound
+# commands, command substitutions).  CI asserts the propagation with
+# `sh benchmarks/smoke.sh --self-test-fail`, a deliberately broken
+# benchmark selection that MUST exit non-zero.
+#
+# Artifacts land in artifacts/bench-fresh (override with SMOKE_OUT) —
+# NEVER in artifacts/bench/, which holds the COMMITTED baselines that
+# benchmarks/check_regression.py gates fresh runs against; refreshing a
+# baseline is an explicit copy + git commit, not a smoke side effect.
+set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+OUT="${SMOKE_OUT:-artifacts/bench-fresh}"
 
-python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
+run() {
+    "$@" || {
+        status=$?
+        echo "smoke.sh: FAILED (exit $status): $*" >&2
+        exit "$status"
+    }
+}
+
+if [ "${1:-}" = "--self-test-fail" ]; then
+    # deliberately broken step: an unknown --only selection exits 2;
+    # reaching the echo below would mean failures do NOT propagate
+    run python -m benchmarks.run --only no_such_benchmark
+    echo "smoke.sh: self-test reached unreachable code — failure did not propagate" >&2
+    exit 0
+fi
+
+run python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
     tests/test_driver_api.py
-python -m benchmarks.run --list
-python -m benchmarks.run --only fused_probe --seed 0 --out artifacts/bench
+run python -m benchmarks.run --list
+run python -m benchmarks.run --only fused_probe --seed 0 --out "$OUT"
 # chip farm: host-thread probe fan-out exercised on every PR
-python -m benchmarks.run --only farm_scaling --smoke --seed 0 \
-    --out artifacts/bench
-python examples/chip_in_the_loop.py --chips 4 --steps 300 --eval-every 150
+run python -m benchmarks.run --only farm_scaling --smoke --seed 0 --out "$OUT"
+# drift/aging: MGD re-trim vs scheduled recal vs no mitigation
+run python -m benchmarks.run --only drift_aging --smoke --seed 0 --out "$OUT"
+run python examples/chip_in_the_loop.py --chips 4 --steps 300 --eval-every 150
+run python examples/chip_in_the_loop.py --drift 0.02 --steps 200 --eval-every 100
 echo "smoke OK"

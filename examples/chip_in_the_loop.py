@@ -23,8 +23,15 @@ every in-process device:
 Swap ``SimulatedAnalogChip`` for a serial-port driver with the same
 two/three methods and nothing else changes.
 
+``--drift σ_d`` ages the chip(s): the stored weights random-walk between
+writes (``DriftingAnalogChip``), keyed on the optimizer's step counter so
+reruns replay the identical aging.  MGD keeps probing the device where it
+actually is, so training holds up — the drift study proper lives in
+``benchmarks/drift_aging.py``.
+
     PYTHONPATH=src python examples/chip_in_the_loop.py
     PYTHONPATH=src python examples/chip_in_the_loop.py --chips 4
+    PYTHONPATH=src python examples/chip_in_the_loop.py --drift 0.02
 """
 import argparse
 
@@ -32,8 +39,8 @@ import jax
 
 import repro
 from repro.data.tasks import nist7x7_batch
-from repro.hardware import (ExternalPlant, SimulatedAnalogChip,
-                            simulated_chip_farm)
+from repro.hardware import (DriftingAnalogChip, ExternalPlant,
+                            SimulatedAnalogChip, simulated_chip_farm)
 from repro.models.simple import mlp_init
 
 SIZES = (49, 4, 4)
@@ -52,6 +59,9 @@ def main(argv=None):
                          "0.125·k for a farm — the k-averaged error "
                          "signal has 1/k the variance, so it supports a "
                          "proportionally larger step)")
+    ap.add_argument("--drift", type=float, default=0.0, metavar="SIGMA_D",
+                    help="per-step random-walk std of the stored weights "
+                         "(aging chip; 0 = stable device)")
     args = ap.parse_args(argv)
     eta = args.eta if args.eta is not None else (
         0.1 if args.chips == 1 else 0.125 * args.chips)
@@ -61,8 +71,13 @@ def main(argv=None):
     cfg = repro.DriverConfig(dtheta=2e-2, eta=eta, tau_theta=1,
                              mode="central", seed=0)
     if args.chips == 1:
-        chip = SimulatedAnalogChip(SIZES, seed=0, sigma_a=0.15,
-                                   sigma_theta=0.01, sigma_c=1e-4)
+        if args.drift:
+            chip = DriftingAnalogChip(SIZES, seed=0, sigma_a=0.15,
+                                      sigma_theta=0.01, sigma_c=1e-4,
+                                      drift_rate=args.drift)
+        else:
+            chip = SimulatedAnalogChip(SIZES, seed=0, sigma_a=0.15,
+                                       sigma_theta=0.01, sigma_c=1e-4)
         plant = ExternalPlant(chip)
         mgd = repro.driver("discrete", cfg, plant=plant)
 
@@ -75,7 +90,7 @@ def main(argv=None):
     else:
         farm = simulated_chip_farm(args.chips, SIZES, base_seed=0,
                                    sigma_a=0.15, sigma_theta=0.01,
-                                   sigma_c=1e-4)
+                                   sigma_c=1e-4, drift_rate=args.drift)
         mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
         accuracy = farm.measure_accuracy
 
@@ -98,8 +113,10 @@ def main(argv=None):
             acc = accuracy(params, {"x": xe, "y": ye})
             print(f"iter {it:5d}: on-chip cost {float(metrics['cost']):.4f} "
                   f"accuracy {acc:.3f} (param writes: {writes()})")
+    drift_note = (f", re-trimming drift sigma_d={args.drift:g}/step online"
+                  if args.drift else "")
     print(f"trained {args.chips} chip(s) through the opaque interface only "
-          "— no gradients, no defect model, no weight readback.")
+          f"— no gradients, no defect model, no weight readback{drift_note}.")
 
 
 if __name__ == "__main__":

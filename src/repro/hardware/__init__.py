@@ -7,22 +7,25 @@ the ``Plant`` protocol:
     IdealPlant      pure JAX, bit-identical (f32) to the in-process path
     NoisyPlant      σ_C readout noise + σ_θ write noise (paper §3.5)
     QuantizedPlant  limited-bit DAC weight writes + slow-write τ lag
+    DriftingPlant   weights random-walk / decay between writes (aging)
     ExternalPlant   host-callback boundary (chip in the loop, §4/§6)
     ChipFarm        k external chips probed concurrently (§6 chip farm)
 
 See ``base.py`` for the protocol contract and ``devices.py`` for
-per-device-seed builders (defective MLPs, simulated analog chip).
+per-device-seed builders (defective MLPs, simulated analog chips —
+including the drifting chip variant for the external boundary).
 """
 from .base import IdealPlant, Plant, PlantMeta
-from .devices import (SimulatedAnalogChip, mlp_device_fns, noisy_mlp_plant,
-                      quantized_mlp_plant)
+from .devices import (DriftingAnalogChip, SimulatedAnalogChip,
+                      mlp_device_fns, noisy_mlp_plant, quantized_mlp_plant)
 from .external import ExternalPlant
 from .farm import ChipFarm, simulated_chip_farm
-from .plants import NoisyPlant, QuantizedPlant, plant_from_config
+from .plants import (DriftingPlant, NoisyPlant, QuantizedPlant,
+                     plant_from_config)
 
 __all__ = [
     "Plant", "PlantMeta", "IdealPlant", "NoisyPlant", "QuantizedPlant",
-    "ExternalPlant", "ChipFarm", "plant_from_config",
-    "SimulatedAnalogChip", "mlp_device_fns", "noisy_mlp_plant",
-    "quantized_mlp_plant", "simulated_chip_farm",
+    "DriftingPlant", "ExternalPlant", "ChipFarm", "plant_from_config",
+    "SimulatedAnalogChip", "DriftingAnalogChip", "mlp_device_fns",
+    "noisy_mlp_plant", "quantized_mlp_plant", "simulated_chip_farm",
 ]

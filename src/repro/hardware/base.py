@@ -60,6 +60,13 @@ class PlantMeta:
     read_latency_s: float = 0.0      # τ per cost readout (≈ τ_p floor)
     external: bool = False           # True → host-callback / process boundary
     chips: int = 1                   # devices probed concurrently (chip farm)
+    # drift/aging: the stored weights move BETWEEN writes (random walk per
+    # step and/or relaxation toward a rest state) — the time-varying device
+    # regime Oripov et al. 2025 flag as the open deployment question.
+    drift_mode: Optional[str] = None  # walk | decay | None (stable device)
+    drift_rate: float = 0.0          # σ_d, per-step random-walk std
+    drift_tau: float = 0.0           # relaxation τ toward drift_rest (steps)
+    drift_rest: float = 0.0          # rest value the weights decay toward
 
     def step_latency_s(self, reads_per_step: int = 2,
                        writes_per_step: int = 1) -> float:

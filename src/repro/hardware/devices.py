@@ -134,6 +134,12 @@ class SimulatedAnalogChip:
                            np.shape(w)).astype(np.float32)),
             params)
 
+    def _stored(self, step):
+        """The weights a readout at optimizer step ``step`` sees.  The
+        stable chip returns the stored values as written; the drifting
+        variant overrides this with the aged values."""
+        return self._params
+
     def _forward(self, x, params=None):
         h = np.asarray(x, np.float32)
         for (a, b, a0, b0), layer in zip(
@@ -162,14 +168,14 @@ class SimulatedAnalogChip:
 
     def measure_cost(self, batch, *, step=None, tag=None):
         """Scalar cost readout (MSE) with measurement noise."""
-        return self._cost(None, batch, step, tag)
+        return self._cost(self._stored(step), batch, step, tag)
 
     def measure_pair(self, theta, batch, *, step=None, tag=None):
         """Differential probe readout (C(θ+θ̃), C(θ−θ̃)): θ̃ rides the
         transient probe line on top of the stored (write-noisy) θ; each
         half is a separate physical conversion with its own readout
         noise (consecutive tags, like the base-class two-read path)."""
-        stored = self._params
+        stored = self._stored(step)
         plus = jax.tree_util.tree_map(
             lambda w, t: w + np.asarray(t, np.float32), stored, theta)
         minus = jax.tree_util.tree_map(
@@ -178,9 +184,97 @@ class SimulatedAnalogChip:
         return (self._cost(plus, batch, step, tag),
                 self._cost(minus, batch, step, tag2))
 
-    def measure_accuracy(self, batch):
+    def measure_accuracy(self, batch, *, step=None):
         """Classification readout (evaluation harness only — the
-        optimizer never calls this)."""
-        pred = self._forward(batch["x"])
+        optimizer never calls this).  ``step`` reads the drifting
+        variant's AGED weights; the stable chip ignores it."""
+        pred = self._forward(batch["x"], self._stored(step))
         return float(np.mean(np.argmax(pred, -1)
                              == np.argmax(np.asarray(batch["y"]), -1)))
+
+
+class DriftingAnalogChip(SimulatedAnalogChip):
+    """A ``SimulatedAnalogChip`` whose stored weights AGE between writes.
+
+    The drift model mirrors ``hardware.plants.DriftingPlant`` on the far
+    side of the host boundary: a readout at optimizer step n sees the
+    stored weights taken through one transition
+
+        θ ← rest + a·(θ − rest) + σ_d·ξ(seed, step, leaf)
+
+    per step j in [write_step, n], ``a = exp(−1/drift_tau)`` — the j =
+    write_step transition is the write-settle interval, so even a read
+    in the SAME step as its write sees one kick of aging.  ``set_params``
+    records the optimizer's step counter when given (``ExternalPlant``/
+    ``ChipFarm`` forward it to step-capable devices), so the aged weights
+    any readout sees are a pure function of (device seed, write step,
+    read step, written values) — a restarted run replays the identical
+    aging, and two chips with different ``drift_rate`` stay
+    distinguishable across the resume.  Writes or reads without a step
+    counter (the bench harness) see the un-aged stored values.
+
+    Under continuous training the trainer rewrites the chip every step,
+    so exactly one transition lands per read — drift shows up as excess
+    probe noise the optimizer must average through.  Once writes STOP (a
+    deployed chip, or the interval between scheduled recalibrations) the
+    walk accumulates freely; the cost of reconstructing it at a readout
+    is O(elapsed steps).
+    """
+
+    def __init__(self, sizes: Sequence[int] = (49, 4, 4), *, seed: int = 0,
+                 sigma_a: float = 0.15, sigma_theta: float = 0.01,
+                 sigma_c: float = 1e-4, drift_mode: str = "walk",
+                 drift_rate: float = 0.0, drift_tau: float = 0.0,
+                 rest: float = 0.0):
+        if drift_mode not in ("walk", "decay"):
+            raise ValueError(f"drift mode must be 'walk' or 'decay', "
+                             f"got {drift_mode!r}")
+        super().__init__(sizes, seed=seed, sigma_a=sigma_a,
+                         sigma_theta=sigma_theta, sigma_c=sigma_c)
+        self._drift_mode = drift_mode
+        self._drift_rate = float(drift_rate)
+        self._drift_tau = float(drift_tau)
+        self._rest = float(rest)
+        self._write_step = None
+        self.meta = PlantMeta(name="sim-chip-drift", cost_noise=sigma_c,
+                              write_noise=sigma_theta, sigma_a=sigma_a,
+                              external=True, drift_mode=drift_mode,
+                              drift_rate=self._drift_rate,
+                              drift_tau=self._drift_tau, drift_rest=rest)
+
+    def set_params(self, params, *, step=None):
+        """Analog memory write; ``step`` (when the plant forwards it)
+        timestamps the write so later readouts know how long the stored
+        values have been aging."""
+        super().set_params(params)
+        self._write_step = None if step is None else int(step)
+
+    def _drift_once(self, params, step):
+        a = (np.exp(-1.0 / self._drift_tau) if self._drift_tau else 1.0)
+
+        def leaf(i, w):
+            w = np.asarray(w, np.float32)
+            if self._drift_tau:
+                w = self._rest + a * (w - self._rest)
+            if self._drift_rate:
+                rng = np.random.default_rng(
+                    (self._seed + 313, int(step), i))
+                w = w + self._drift_rate * rng.standard_normal(
+                    w.shape).astype(np.float32)
+            return w
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaf(i, w) for i, w in enumerate(flat, start=1)])
+
+    def _stored(self, step):
+        """Stored weights aged from the recorded write step to ``step``,
+        inclusive — the readouts inherited from ``SimulatedAnalogChip``
+        all see the aged values through this one hook."""
+        params = self._params
+        if (step is None or self._write_step is None
+                or (not self._drift_rate and not self._drift_tau)):
+            return params
+        for j in range(self._write_step, int(step) + 1):
+            params = self._drift_once(params, j)
+        return params

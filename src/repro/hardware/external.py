@@ -15,7 +15,7 @@ internals — defects, write noise and readout noise all live in the host
 object (paper §4/§6: the regime where backprop-through-a-model breaks
 and model-free MGD does not).
 
-Two optional device capabilities refine the boundary:
+Three optional device capabilities refine the boundary:
 
 * ``measure_cost(batch, *, step, tag)`` — devices whose readout noise is
   counter-keyed accept the optimizer's (step, tag) pair, so the +/−
@@ -28,6 +28,10 @@ Two optional device capabilities refine the boundary:
   through the persistent write path.  ``read_cost_pair`` then costs ONE
   ``set_params`` of the base θ per central pair instead of two full
   writes of the perturbed tree, in a single host round-trip.
+* ``set_params(params, *, step)`` — drifting devices (see
+  ``devices.DriftingAnalogChip``) timestamp every persistent write with
+  the optimizer's step counter, so readouts reconstruct how long the
+  stored weights have been aging — deterministically across restarts.
 
 Ordered callbacks sequence the host I/O with program order but are not
 allowed inside ``lax.cond`` branches, so external plants run the one
@@ -70,6 +74,20 @@ def accepts_counters(fn) -> bool:
     return "step" in params and "tag" in params
 
 
+def accepts_step(fn) -> bool:
+    """True when ``fn`` (a device's ``set_params``) accepts the optimizer's
+    ``step`` keyword — drifting devices timestamp each persistent write so
+    readouts know how long the stored weights have been aging.  Inspected
+    once at construction, like ``accepts_counters``."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):     # builtins/C callables: be safe
+        return False
+    if any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True
+    return "step" in params
+
+
 def check_device(device: Any) -> None:
     """Validate the minimal lab-instrument surface of ``device``."""
     for attr in ("set_params", "measure_cost"):
@@ -90,14 +108,23 @@ class ExternalPlant(Plant):
         self.device = device
         # capability inspection happens here, once — not per read
         self._measure_counters = accepts_counters(device.measure_cost)
+        self._write_step = accepts_step(device.set_params)
         pair = getattr(device, "measure_pair", None)
         self._measure_pair = pair if callable(pair) else None
         self._pair_counters = (self._measure_pair is not None
                                and accepts_counters(self._measure_pair))
         self.meta = meta or PlantMeta(name="external", external=True)
 
+    def _set_params(self, params, step):
+        """One persistent device write, timestamped for step-capable
+        (drifting) devices."""
+        if self._write_step:
+            self.device.set_params(params, step=int(step))
+        else:
+            self.device.set_params(params)
+
     def _host_read(self, params, batch, step, tag):
-        self.device.set_params(params)
+        self._set_params(params, step)
         if self._measure_counters:
             return np.float32(self.device.measure_cost(
                 batch, step=int(step), tag=int(tag)))
@@ -112,7 +139,7 @@ class ExternalPlant(Plant):
     def _host_read_pair(self, params, theta, batch, step, tag):
         # ONE persistent write of the base θ; the antithetic pair rides
         # the device's transient probe line (no second full-tree write).
-        self.device.set_params(params)
+        self._set_params(params, step)
         if self._pair_counters:
             c_plus, c_minus = self._measure_pair(
                 theta, batch, step=int(step), tag=int(tag))
@@ -134,8 +161,8 @@ class ExternalPlant(Plant):
             jnp.asarray(tag, jnp.int32), ordered=True)
         return out[0], out[1]
 
-    def _host_write(self, params):
-        self.device.set_params(params)
+    def _host_write(self, params, step):
+        self._set_params(params, step)
         return np.int32(0)
 
     def write_params(self, params, *, step, prev=None):
@@ -144,5 +171,5 @@ class ExternalPlant(Plant):
         the device is invisible by construction — exactly the open-loop
         write the paper's chip-in-the-loop setup performs."""
         _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
-                     params, ordered=True)
+                     params, jnp.asarray(step, jnp.int32), ordered=True)
         return params

@@ -39,8 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import Plant, PlantMeta
-from .devices import SimulatedAnalogChip
-from .external import _io_callback, accepts_counters, check_device
+from .devices import DriftingAnalogChip, SimulatedAnalogChip
+from .external import (_io_callback, accepts_counters, accepts_step,
+                       check_device)
 
 
 def _np_axpy(sign, theta, params):
@@ -79,6 +80,7 @@ class ChipFarm(Plant):
                 "counters": accepts_counters(device.measure_cost),
                 "pair": pair,
                 "pair_counters": pair is not None and accepts_counters(pair),
+                "write_step": accepts_step(device.set_params),
             })
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers or len(devices),
@@ -101,19 +103,27 @@ class ChipFarm(Plant):
 
     # -- host side (numpy-pure, runs on the callback + pool threads) --------
 
+    def _set_params(self, i, params, step=None):
+        """One chip's persistent write, timestamped for step-capable
+        (drifting) devices."""
+        if step is not None and self._caps[i]["write_step"]:
+            self.devices[i].set_params(params, step=int(step))
+        else:
+            self.devices[i].set_params(params)
+
     def _chip_pair(self, i, params, theta, batch, step):
         """One chip's central pair → (C₊, C₋).  Tags (2i, 2i+1) mirror the
         mesh driver's per-pod tag layout."""
         device, caps = self.devices[i], self._caps[i]
         tag = 2 * i
         if caps["pair"] is not None:
-            device.set_params(params)          # ONE base-θ write per pair
+            self._set_params(i, params, step)  # ONE base-θ write per pair
             if caps["pair_counters"]:
                 return caps["pair"](theta, batch, step=step, tag=tag)
             return caps["pair"](theta, batch)
         # plain 2-method device: two perturbed writes + two reads
         def read(perturbed, t):
-            device.set_params(perturbed)
+            self._set_params(i, perturbed, step)
             if caps["counters"]:
                 return device.measure_cost(batch, step=step, tag=t)
             return device.measure_cost(batch)
@@ -130,9 +140,9 @@ class ChipFarm(Plant):
         # gather in chip order — the schedule cannot reorder results
         return np.asarray([f.result() for f in futures], np.float32)
 
-    def _host_write(self, params):
-        for f in [self._pool.submit(d.set_params, params)
-                  for d in self.devices]:
+    def _host_write(self, params, step):
+        for f in [self._pool.submit(self._set_params, i, params, step)
+                  for i in range(self.n_chips)]:
             f.result()
         return np.int32(0)
 
@@ -161,7 +171,7 @@ class ChipFarm(Plant):
         """Commit the post-update parameters to EVERY chip (open-loop, as
         in ``ExternalPlant``: per-chip write noise stays invisible)."""
         _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
-                     params, ordered=True)
+                     params, jnp.asarray(step, jnp.int32), ordered=True)
         return params
 
     # -- evaluation harness (eager, never inside the traced step) ------------
@@ -191,19 +201,43 @@ class ChipFarm(Plant):
 def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
                         base_seed: int = 0, sigma_a: float = 0.15,
                         sigma_theta: float = 0.01, sigma_c: float = 1e-4,
+                        drift_rate: float = 0.0,
+                        drift_rates: Optional[Sequence[float]] = None,
+                        drift_mode: str = "walk", drift_tau: float = 0.0,
                         max_workers: Optional[int] = None) -> ChipFarm:
     """A farm of k ``SimulatedAnalogChip``s with DISTINCT device seeds —
     k different physical chips (different defect draws, different noise
-    streams), the same instrument replicated k× on the bench."""
+    streams), the same instrument replicated k× on the bench.
+
+    ``drift_rate`` (every chip) or ``drift_rates`` (one σ_d per chip — a
+    HETEROGENEOUS farm, where chip i ages at its own rate) build
+    ``DriftingAnalogChip``s instead; aging stays per-device-seed keyed,
+    so two chips with different rates remain distinguishable across a
+    checkpoint/resume.  Zero-rate chips stay plain (bit-identical to the
+    drift-free farm)."""
     if k < 1:
         raise ValueError(f"need at least one chip, got k={k}")
+    if drift_rates is None:
+        rates = [float(drift_rate)] * k
+    else:
+        rates = [float(r) for r in drift_rates]
+        if len(rates) != k:
+            raise ValueError(f"{len(rates)} drift_rates for {k} chips")
     devices = [
         SimulatedAnalogChip(sizes, seed=base_seed + i, sigma_a=sigma_a,
                             sigma_theta=sigma_theta, sigma_c=sigma_c)
+        if not (rates[i] or drift_tau) else
+        DriftingAnalogChip(sizes, seed=base_seed + i, sigma_a=sigma_a,
+                           sigma_theta=sigma_theta, sigma_c=sigma_c,
+                           drift_mode=drift_mode, drift_rate=rates[i],
+                           drift_tau=drift_tau)
         for i in range(k)
     ]
+    drifting = any(rates) or drift_tau
     return ChipFarm(
         devices, max_workers=max_workers,
-        meta=PlantMeta(name=f"sim-farm-{k}", cost_noise=sigma_c,
-                       write_noise=sigma_theta, sigma_a=sigma_a,
-                       external=True, chips=k))
+        meta=PlantMeta(name=f"sim-farm-{k}" + ("-drift" if drifting else ""),
+                       cost_noise=sigma_c, write_noise=sigma_theta,
+                       sigma_a=sigma_a, external=True, chips=k,
+                       drift_mode=drift_mode if drifting else None,
+                       drift_rate=max(rates), drift_tau=drift_tau))

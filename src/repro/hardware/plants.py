@@ -39,9 +39,24 @@ the error signal at 0 and training stalls — the Δθ·|∇C| signal floor the
 paper's Fig. 8 implies, mapped onto ADC bits (stochastic rounding
 recovers the signal in expectation at the cost of readout variance; see
 benchmarks/hardware_plants.py and EXPERIMENTS.md §Hardware).
+
+``DriftingPlant`` is the time-VARYING device the follow-up scaling study
+(Oripov et al. 2025) flags as the open deployment question: the stored
+weights move *between* writes — an Ornstein–Uhlenbeck random walk
+(``mode="walk"``: per-step gaussian kicks, optionally mean-reverting)
+or a relaxation toward a rest state (``mode="decay"``: analog memory
+leakage).  One drift transition lands after every committed write event,
+keyed on the optimizer's step counter — the same determinism contract as
+``NoisyPlant``/``SimulatedAnalogChip``, so checkpoint/resume replays the
+identical device trajectory.  MGD's continuous zero-order feedback then
+re-trims the aging device online; ``benchmarks/drift_aging.py`` measures
+the drift rate at which that feedback, scheduled recalibration, and no
+mitigation each collapse.
 """
 from __future__ import annotations
 
+import copy
+import dataclasses
 import math
 from typing import Callable, Optional
 
@@ -221,6 +236,124 @@ class QuantizedPlant(Plant):
             costs = jnp.stack([self._adc(costs[i], step, t)
                                for i, t in enumerate(tags)])
         return costs
+
+
+class DriftingPlant(Plant):
+    """Device whose stored weights age BETWEEN writes (drift/aging model).
+
+    Wraps any in-process plant (composition: DAC quantization, write
+    noise, ADC readout all keep applying through ``inner``).  After every
+    committed write event the landed weights take one drift transition
+
+        θ ← rest + a·(θ − rest) + σ_d·ξ(seed, leaf, step)
+
+    with ``a = exp(−1/drift_tau)`` (``a = 1`` when ``drift_tau = 0``):
+
+    * ``mode="walk"`` — Ornstein–Uhlenbeck random walk: per-step gaussian
+      kicks of std ``drift_rate`` (σ_d), optionally mean-reverting toward
+      ``rest`` when ``drift_tau`` is set.  ``drift_tau = 0`` is the pure
+      random walk (free diffusion of the stored values).
+    * ``mode="decay"`` — relaxation toward ``rest`` with time constant
+      ``drift_tau`` write events (analog memory leakage / state decay);
+      ``drift_rate`` may ride along as diffusion on top.
+
+    The kick is keyed on (device seed, leaf index, step counter) — never
+    on threaded RNG state — so a checkpointed/restarted run replays the
+    IDENTICAL device trajectory (the same contract as ``NoisyPlant`` and
+    ``SimulatedAnalogChip``).  Because the optimizer carries the landed
+    tree, the walk accumulates naturally across steps, and MGD's online
+    feedback measures cost at the drifted weights and re-trims from
+    wherever the device actually is.  ``drift``/``age`` expose the bare
+    transition so benchmarks can age a device with NO optimizer writes
+    (the no-mitigation / scheduled-recalibration baselines in
+    ``benchmarks/drift_aging.py``).
+
+    External plants are rejected: their true weights live behind the host
+    boundary, so drifting the trainer-side belief would age the wrong
+    copy — use ``hardware.devices.DriftingAnalogChip`` behind
+    ``ExternalPlant``/``ChipFarm`` for the chip-in-the-loop version.
+    """
+
+    def __init__(self, inner: Plant, *, mode: str = "walk",
+                 drift_rate: float = 0.0, drift_tau: float = 0.0,
+                 rest: float = 0.0, seed: int = 0,
+                 meta: Optional[PlantMeta] = None):
+        if not isinstance(inner, Plant):
+            raise TypeError(f"inner must be a repro.hardware.Plant, got "
+                            f"{type(inner).__name__}")
+        if inner.meta.external:
+            raise ValueError(
+                "DriftingPlant cannot wrap an external plant — the device's "
+                "stored weights live behind the host boundary; put the drift "
+                "IN the device (hardware.devices.DriftingAnalogChip) instead")
+        if mode not in ("walk", "decay"):
+            raise ValueError(f"drift mode must be 'walk' or 'decay', "
+                             f"got {mode!r}")
+        if mode == "walk" and drift_rate <= 0.0:
+            raise ValueError("mode='walk' needs drift_rate > 0 (σ_d, the "
+                             "per-step random-walk std)")
+        if mode == "decay" and drift_tau <= 0.0:
+            raise ValueError("mode='decay' needs drift_tau > 0 (the "
+                             "relaxation time constant, in write events)")
+        self.inner = inner
+        self.mode = mode
+        self.drift_rate = float(drift_rate)
+        self.drift_tau = float(drift_tau)
+        self.rest = float(rest)
+        self.seed = int(seed)
+        self.probe_fn = inner.probe_fn
+        self.meta = meta or dataclasses.replace(
+            inner.meta, name=f"drifting-{inner.meta.name}", drift_mode=mode,
+            drift_rate=self.drift_rate, drift_tau=self.drift_tau,
+            drift_rest=self.rest)
+
+    # -- the aging transition (public: benchmarks age devices write-free) ----
+    def drift(self, params, step):
+        """One drift transition of the stored weights, keyed on ``step``."""
+        a = math.exp(-1.0 / self.drift_tau) if self.drift_tau else 1.0
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = []
+        for i, x in enumerate(leaves, start=1):
+            y = x.astype(jnp.float32)
+            if self.drift_tau:
+                y = self.rest + a * (y - self.rest)
+            if self.drift_rate:
+                k = jax.random.fold_in(
+                    jax.random.PRNGKey(self.seed + 313), i)
+                k = jax.random.fold_in(k, step)
+                y = y + self.drift_rate * jax.random.normal(
+                    k, x.shape, jnp.float32)
+            out.append(y.astype(x.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def age(self, params, start_step, n_steps: int):
+        """``n_steps`` drift transitions with NO writes (a held device):
+        steps ``start_step .. start_step + n_steps − 1``.  Jit/scan-safe."""
+        return jax.lax.fori_loop(
+            0, n_steps, lambda j, p: self.drift(p, start_step + j), params)
+
+    # -- plant protocol: reads delegate (the carried tree IS the drifted
+    # device state); writes land through the inner device, then age once --
+    def write_params(self, params, *, step, prev=None):
+        return self.drift(
+            self.inner.write_params(params, step=step, prev=prev), step)
+
+    def read_cost(self, params, batch, *, step, tag: int = 0):
+        return self.inner.read_cost(params, batch, step=step, tag=tag)
+
+    def read_cost_pair(self, params, theta, batch, *, step, tag: int = 0):
+        return self.inner.read_cost_pair(params, theta, batch,
+                                         step=step, tag=tag)
+
+    def apply_perturbed(self, params, batch, probe, *, step, tags):
+        inner = self.inner
+        if self.probe_fn is not None and inner.probe_fn is not self.probe_fn:
+            # a probe_fn attached to the wrapper (driver resolution) rides
+            # down so the inner device's imperfections still apply
+            inner = copy.copy(inner)
+            inner.probe_fn = self.probe_fn
+        return inner.apply_perturbed(params, batch, probe,
+                                     step=step, tags=tags)
 
 
 def plant_from_config(loss_fn, cfg, *, probe_fn=None) -> Plant:

@@ -68,6 +68,21 @@ def _ckpt_tree(params, state):
     return {"params": params, "state": state}
 
 
+def _recalibrate(drv, params, shadow, step):
+    """Scheduled recalibration: commit the trainer's shadow parameters to
+    the device, replacing whatever drifted state is stored there.  The
+    rewrite lands through the plant's write path — DAC grid, write noise,
+    and one drift transition all apply (a recalibration write is still a
+    write on an aging device).  With no explicit plant the device is the
+    implicit ideal one and the rewrite is the shadow itself."""
+    plant = drv.plant
+    shadow = jax.tree_util.tree_map(jnp.asarray, shadow)
+    if plant is None:
+        return shadow
+    return plant.write_params(shadow, step=jnp.asarray(step, jnp.int32),
+                              prev=params)
+
+
 def _restore_any(checkpoint_dir, params, state, log):
     """Restore the newest checkpoint into (params, state), falling back
     through the historical layouts: full-state → PR-2 buffers-only
@@ -126,8 +141,25 @@ def train_mgd(
     probe_fn: Optional[Callable] = None,   # fused probe path (cfg.fused)
     plant=None,                   # hardware.Plant device (None → implicit)
     mesh=None,                    # probe-parallel probe mesh
+    recal_every: int = 0,         # scheduled full-rewrite period (0 = off)
+    recal_params=None,            # shadow params to rewrite (None → initial)
 ) -> TrainResult:
-    """Run any MGD driver for ``num_steps`` iterations (τ_p ticks)."""
+    """Run any MGD driver for ``num_steps`` iterations (τ_p ticks).
+
+    ``recal_every`` turns on scheduled recalibration — the lab-bench
+    mitigation for drifting/aging devices that MGD's online feedback is
+    measured against (``benchmarks/drift_aging.py``): every
+    ``recal_every`` completed steps the loop rewrites the device from the
+    trainer's shadow parameters (``recal_params``, defaulting to the
+    initial ``params`` — the last full calibration) through the plant's
+    write path.  Boundaries are a pure function of the global step, so
+    checkpoint/resume replays the identical recalibration schedule.
+    """
+    if recal_every < 0:
+        raise ValueError(f"recal_every must be >= 0, got {recal_every}")
+    # shadow captured from the caller's arguments BEFORE any resume
+    # restore — the factory calibration, identical across restarts
+    shadow = recal_params if recal_params is not None else params
     drv = _as_driver(loss_fn, cfg, probe_fn=probe_fn, plant=plant,
                      mesh=mesh, algorithm=algorithm)
     state = drv.init(params)
@@ -177,6 +209,9 @@ def train_mgd(
     t0 = time.time()
     while done < num_steps:
         n = min(chunk, num_steps - done)
+        if recal_every:
+            # stop each device program at the next recalibration boundary
+            n = min(n, recal_every - done % recal_every)
         if n not in runners:
             runners[n] = make_runner(n)
         params, state, metrics = runners[n](params, state)
@@ -189,6 +224,11 @@ def train_mgd(
             msg = " ".join(f"{k}={v:.4g}" for k, v in rec.items())
             log(f"[mgd] step {done}/{num_steps} {msg} "
                 f"({(time.time()-t0):.1f}s)")
+        if recal_every and done % recal_every == 0 and done < num_steps:
+            params = _recalibrate(drv, params, shadow, done)
+            if log:
+                log(f"[mgd] step {done}: scheduled recalibration "
+                    f"(full rewrite from shadow params)")
         if checkpoint_dir and checkpoint_every and done % checkpoint_every == 0:
             ckpt.save(checkpoint_dir, done, _ckpt_tree(params, state),
                       extra={"algo": drv.algorithm,

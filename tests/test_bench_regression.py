@@ -1,0 +1,116 @@
+"""The bench-regression gate's comparator (no benchmarks are run).
+
+Load-bearing:
+* A gated metric inside its tolerance band passes; outside fails.
+* ``direction="min"`` gates only the drop — improvements pass.
+* Baseline files whose gated metrics ALL vanished from the fresh run
+  fail loudly (renames must update the tolerance table, not un-gate).
+* ``--self-test`` proves end-to-end that a perturbed committed baseline
+  is caught — the acceptance check CI runs next to the real gate.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "..",
+                            "artifacts", "bench")
+
+
+def rows(**named):
+    return [{"bench": "x", "name": k, "value": v} for k, v in named.items()]
+
+
+def test_spec_matching_first_wins():
+    assert cr.spec_for("drift_aging", "retrim_hold_frac")["abs"] == 0.04
+    assert cr.spec_for("fused_probe", "mlp_central_wread_ratio") is not None
+    # timing rows carry no spec → informational
+    assert cr.spec_for("fused_probe", "mlp_central_fused") is None
+    assert cr.spec_for("unknown_bench", "anything") is None
+
+
+def test_within_band_passes_and_beyond_fails():
+    base = rows(mlp_central_wread_ratio=4.0)
+    ok, checked, _ = cr.compare_file(
+        "fused_probe", rows(mlp_central_wread_ratio=4.0005), base)
+    assert (ok, checked) == (0, 1)
+    bad, checked, findings = cr.compare_file(
+        "fused_probe", rows(mlp_central_wread_ratio=2.0), base)
+    assert (bad, checked) == (1, 1)
+    assert any(status == "FAIL" for status, _, _ in findings)
+
+
+def test_direction_min_gates_only_drops():
+    base = rows(retrim_hold_frac=0.888)
+    better, _, _ = cr.compare_file(
+        "drift_aging", rows(retrim_hold_frac=0.99), base)
+    assert better == 0
+    worse, _, _ = cr.compare_file(
+        "drift_aging", rows(retrim_hold_frac=0.80), base)
+    assert worse == 1
+
+
+def test_ungated_metric_is_informational():
+    base = rows(mlp_central_fused=1000.0)
+    violations, checked, findings = cr.compare_file(
+        "fused_probe", rows(mlp_central_fused=3.0), base)
+    # a 300x slowdown in a timing row never gates
+    assert (violations, checked) == (0, 0)
+    assert findings[0][0] == "info"
+
+
+def test_fresh_metric_without_baseline_warns():
+    violations, checked, findings = cr.compare_file(
+        "drift_aging", rows(retrim_hold_frac=0.9),
+        rows(driftfree_accuracy=0.83))
+    # the fresh metric is gated but unbaselined → warn; meanwhile the
+    # baseline's own gated metric went unmatched → the no-match guard
+    # fires because checked == 0
+    assert checked == 0
+    assert violations == 1
+    assert any(status == "warn" for status, _, _ in findings)
+
+
+def test_all_gated_metrics_vanishing_fails():
+    base = rows(retrim_hold_frac=0.888, driftfree_accuracy=0.83)
+    violations, checked, findings = cr.compare_file(
+        "drift_aging", rows(renamed_hold_metric=0.9), base)
+    assert checked == 0
+    assert violations == 1
+    assert any(name == "<gate>" for _, name, _ in findings)
+
+
+def test_compare_dirs_identity_passes_on_committed_baselines():
+    assert cr.compare_dirs(BASELINE_DIR, BASELINE_DIR, verbose=False) == 0
+
+
+def test_perturbed_committed_baseline_fails(tmp_path):
+    """The acceptance check: perturb one gated metric in a copy of the
+    committed artifacts beyond its tolerance — the gate must exit
+    non-zero."""
+    src = os.path.join(BASELINE_DIR, "drift_aging.json")
+    with open(src) as f:
+        payload = json.load(f)
+    perturbed = [dict(r, value=0.1) if r["name"] == "retrim_hold_frac"
+                 else r for r in payload["rows"]]
+    assert perturbed != payload["rows"]
+    with open(tmp_path / "drift_aging.json", "w") as f:
+        json.dump({**payload, "rows": perturbed}, f)
+    assert cr.compare_dirs(str(tmp_path), BASELINE_DIR, verbose=False) > 0
+
+
+def test_self_test_green_on_committed_baselines(capsys):
+    assert cr.self_test(BASELINE_DIR) == 0
+    assert "self-test OK" in capsys.readouterr().out
+
+
+def test_empty_fresh_dir_fails(tmp_path):
+    assert cr.compare_dirs(str(tmp_path), BASELINE_DIR, verbose=False) == 1
+
+
+def test_main_cli(tmp_path):
+    assert cr.main(["--fresh", BASELINE_DIR, "--baseline", BASELINE_DIR]) == 0
+    assert cr.main(["--self-test", "--baseline", BASELINE_DIR]) == 0
+    assert cr.main(["--fresh", str(tmp_path), "--baseline", BASELINE_DIR]) == 1
