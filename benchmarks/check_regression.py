@@ -44,6 +44,14 @@ TOLERANCES = [
     ("drift_aging", "driftfree_accuracy", dict(abs=0.10, direction="min")),
     ("drift_aging", "acc_mgd_*", dict(abs=0.10, direction="min")),
     ("drift_aging", "projected_*", dict(rel=0.01)),
+    # fault_tolerance — accuracy hold fractions under injected faults;
+    # min-direction (a policy that holds MORE accuracy is fine), and the
+    # two exact invariants (bit-exact retry transparency + resume) gate
+    # at zero tolerance
+    ("fault_tolerance", "fault_free_accuracy", dict(abs=0.10, direction="min")),
+    ("fault_tolerance", "hold_frac_retry_transient", dict(abs=0.0)),
+    ("fault_tolerance", "hold_frac_*", dict(abs=0.05, direction="min")),
+    ("fault_tolerance", "resume_bitexact", dict(abs=0.0)),
     # farm_scaling — the 1/k law and farm convergence
     ("farm_scaling", "ghat_variance_*", dict(rel=0.75)),
     ("farm_scaling", "variance_ratio_*", dict(rel=0.5)),

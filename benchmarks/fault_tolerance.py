@@ -1,0 +1,254 @@
+"""Fault tolerance: the chip farm surviving hangs, crashes and garbage.
+
+The paper's deployment endgame is training on *imperfect physical
+hardware* — and real instruments hang, crash and return garbage, not
+just Gaussian noise; k-chip probe parallelism multiplies that fault
+surface by k.  This benchmark sweeps fault kind × host-boundary policy
+{none, retry, retry+quarantine, +robust-aggregation} on nist7x7 farms
+and records how gracefully accuracy degrades:
+
+* ``fault_free_accuracy`` — the clean farm's accuracy (the yardstick).
+* ``acc_none_silent`` — silent corruption (NaN + outlier costs) with NO
+  policy: one NaN poisons the averaged update for every chip and the
+  run collapses.  Informational: it demonstrates the failure mode.
+* ``hold_frac_retry_transient`` — 10% transient faults healed by
+  retries.  Counter-keyed readouts make a successful retry return the
+  identical value the fault-free run reads, and σ_θ = 0 silences the
+  only live-RNG stream, so this trajectory is BIT-IDENTICAL to the
+  fault-free one: the hold fraction is exactly 1.0.
+* ``hold_frac_full_silent`` — 10% silent faults under the full policy
+  (retry + quarantine + MAD aggregation over the gathered scalars).
+  GATED ≥ 0.95 in-benchmark: NaNs are rejected at the boundary and
+  retried, finite outliers only the statistics can catch.
+* ``hold_frac_quarantine_broken_chip`` — chip 3 dies permanently at
+  step 20; quarantine stops burning (retries+1)×timeout on it every
+  step while the masked average (η-rescaling rule) keeps training on
+  the 3 survivors.  ``broken_chip_attempt_frac`` records the I/O saved.
+* ``hang_stall_s`` — a chip that HANGS (sleep > timeout) stalls its
+  step by at most the configured timeout, never hang_s, never forever.
+* ``resume_bitexact`` — checkpoint/resume through injected faults:
+  retries are host-side, the traced trajectory is a pure function of
+  the gathered costs, so resume == uninterrupted, bit for bit.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.api import DriverConfig, driver
+from repro.data import tasks
+from repro.data.pipeline import generator_sampler
+from repro.hardware import (ChipFarm, FaultPolicy, FaultSpec, FaultyChip,
+                            simulated_chip_farm)
+from repro.models.simple import mlp_init
+from repro.training.train_loop import train_mgd
+
+K = 4
+SIZES = (49, 4, 4)
+RATE = 0.10                       # headline transient/silent fault rate
+HOLD_TARGET = 0.95                # full policy must keep ≥95% of clean acc
+
+
+def _policy(**kw):
+    base = dict(timeout_s=5.0, retries=3, backoff_s=0.01,
+                backoff_factor=2.0, backoff_max_s=0.1)
+    base.update(kw)
+    return FaultPolicy(**base)
+
+
+# the sweep's policy ladder: nothing → retry → +quarantine → +robust agg
+POLICIES = {
+    "none": None,
+    "retry": _policy(),
+    "retry_quarantine": _policy(quarantine_after=4, reprobe_every=60),
+    "full": _policy(quarantine_after=4, reprobe_every=60,
+                    aggregate="mad", mad_threshold=8.0),
+}
+
+TRANSIENT = FaultSpec(transient=RATE)
+SILENT = FaultSpec(nan=RATE / 2, outlier=RATE / 2, outlier_scale=50.0)
+
+
+def _farm(seed, steps, *, faults=None, policy=None):
+    # σ_θ = 0: the persistent-write draw is the only live-RNG stream;
+    # silencing it makes transient-fault + retry runs BIT-identical to
+    # the fault-free run (readouts are (step, tag) counter-keyed)
+    return simulated_chip_farm(K, SIZES, base_seed=100 * seed, sigma_a=0.15,
+                               sigma_theta=0.0, sigma_c=1e-4,
+                               faults=faults, fault_seed=1000 + seed,
+                               fault_policy=policy)
+
+
+def _train(farm, seed, steps):
+    cfg = DriverConfig(dtheta=2e-2, eta=0.125 * K, mode="central", seed=seed)
+    params = mlp_init(jax.random.PRNGKey(seed), SIZES)
+    res = train_mgd(None, params, cfg,
+                    generator_sampler(tasks.nist7x7_batch, 8, seed=11 + seed),
+                    steps, algorithm="probe_parallel_external", plant=farm,
+                    chunk=max(steps // 4, 1), log=None)
+    xe, ye = tasks.nist7x7_batch(jax.random.PRNGKey(99), 512)
+    acc = farm.measure_accuracy(res.params,
+                                {"x": np.asarray(xe), "y": np.asarray(ye)})
+    return float(acc), res
+
+
+def _sweep_rows(seed, steps):
+    rows = []
+    acc_clean, _ = _train(_farm(seed, steps), seed, steps)
+    rows.append({"bench": "fault_tolerance", "name": "fault_free_accuracy",
+                 "value": acc_clean,
+                 "detail": f"k={K} nist7x7 farm, {steps} steps, no faults"})
+
+    # the failure mode: silent NaN/outlier corruption, no policy at all
+    acc_none, _ = _train(_farm(seed, steps, faults=SILENT), seed, steps)
+    rows.append({"bench": "fault_tolerance", "name": "acc_none_silent",
+                 "value": acc_none,
+                 "detail": f"{RATE:.0%} NaN/outlier faults, no policy — "
+                           f"one NaN poisons every chip's update "
+                           f"(clean: {acc_clean:.3f})"})
+
+    # transient faults healed by retries: bit-identical to fault-free
+    acc_retry, _ = _train(
+        _farm(seed, steps, faults=TRANSIENT, policy=POLICIES["retry"]),
+        seed, steps)
+    hold_retry = acc_retry / acc_clean if acc_clean else 0.0
+    rows.append({"bench": "fault_tolerance",
+                 "name": "hold_frac_retry_transient", "value": hold_retry,
+                 "detail": f"{RATE:.0%} transient faults + retry policy; "
+                           f"counter-keyed retries make this exactly 1.0"})
+    if hold_retry != 1.0:
+        raise RuntimeError(
+            f"transient faults healed by retries must be bit-invisible "
+            f"(hold fraction 1.0), got {hold_retry}")
+
+    # the headline: silent corruption under the full policy
+    farm_full = _farm(seed, steps, faults=SILENT, policy=POLICIES["full"])
+    acc_full, _ = _train(farm_full, seed, steps)
+    hold_full = acc_full / acc_clean if acc_clean else 0.0
+    rows.append({"bench": "fault_tolerance", "name": "hold_frac_full_silent",
+                 "value": hold_full,
+                 "detail": f"{RATE:.0%} NaN/outlier faults + retry + "
+                           f"quarantine + MAD aggregation; "
+                           f"{farm_full.fault_summary()['by_kind']}"})
+    if hold_full < HOLD_TARGET:
+        raise RuntimeError(
+            f"full policy held only {hold_full:.3f} of fault-free accuracy "
+            f"at {RATE:.0%} silent faults (target ≥ {HOLD_TARGET})")
+
+    # a permanently-broken chip: quarantine + masked average (η rescale)
+    broken = FaultSpec(transient=1.0, only_steps=(20, 10 ** 9))
+    specs = [None] * (K - 1) + [broken]
+    farm_q = _farm(seed, steps, faults=specs,
+                   policy=POLICIES["retry_quarantine"])
+    acc_broken, _ = _train(farm_q, seed, steps)
+    rows.append({"bench": "fault_tolerance",
+                 "name": "hold_frac_quarantine_broken_chip",
+                 "value": acc_broken / acc_clean if acc_clean else 0.0,
+                 "detail": f"chip {K-1} dies at step 20; survivors train "
+                           f"on the masked average; "
+                           f"{farm_q.fault_summary()['by_kind']}"})
+    broken_chip = farm_q.devices[-1]
+    assert isinstance(broken_chip, FaultyChip)
+    attempt_frac = broken_chip.readouts / steps
+    rows.append({"bench": "fault_tolerance", "name": "broken_chip_attempt_frac",
+                 "value": attempt_frac,
+                 "detail": f"broken chip readout attempts per step; without "
+                           f"quarantine every step would burn "
+                           f"{POLICIES['retry_quarantine'].retries + 1} "
+                           f"attempts (+timeouts) on it"})
+    return rows
+
+
+def _hang_row():
+    """A hung chip stalls one step by ≈timeout_s, not hang_s: tiny xor
+    farm, chip 0 hangs 1.0 s at step 1, policy timeout 0.2 s."""
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+    hang_s, timeout_s = 1.0, 0.2
+    devices = [FaultyChip(
+        _small_chip(s), FaultSpec(hang=1.0, hang_s=hang_s,
+                                  only_steps=(1, 2)) if s == 0 else
+        FaultSpec(), seed=s) for s in range(3)]
+    farm = ChipFarm(devices, fault_policy=_policy(timeout_s=timeout_s,
+                                                  retries=0))
+    cfg = DriverConfig(dtheta=1e-2, eta=0.3, mode="central", seed=0)
+    mgd = driver("probe_parallel_external", cfg, plant=farm)
+    params = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+    p, s = params, mgd.init(params)
+    p, s, _ = mgd.step(p, s, batch)        # step 0: compile + warm up
+    jax.block_until_ready(p)
+    t0 = time.monotonic()
+    p, s, m = mgd.step(p, s, batch)        # step 1: chip 0 hangs
+    jax.block_until_ready(p)
+    stall = time.monotonic() - t0
+    if stall >= 0.85 * hang_s:
+        raise RuntimeError(
+            f"hung chip stalled the step {stall:.2f}s — the {timeout_s}s "
+            f"timeout did not bound it (hang_s={hang_s}s)")
+    if int(m["n_valid"]) != 2:
+        raise RuntimeError(f"hung chip was not masked: n_valid="
+                           f"{int(m['n_valid'])}")
+    return {"bench": "fault_tolerance", "name": "hang_stall_s",
+            "value": stall,
+            "detail": f"step wall-clock with one chip hanging {hang_s}s "
+                      f"under timeout_s={timeout_s}; n_valid=2/3"}
+
+
+def _small_chip(seed):
+    from repro.hardware import SimulatedAnalogChip
+    return SimulatedAnalogChip((2, 2, 1), seed=seed, sigma_a=0.1,
+                               sigma_theta=0.0, sigma_c=1e-3)
+
+
+def _resume_row(seed):
+    """Checkpoint/resume bit-exactness through transient faults healed
+    by retries (σ_θ = 0: the traced trajectory is a pure function of the
+    counter-keyed gathered costs)."""
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+
+    def farm():
+        return simulated_chip_farm(
+            2, (2, 2, 1), base_seed=seed, sigma_a=0.1, sigma_theta=0.0,
+            sigma_c=1e-3, faults=FaultSpec(transient=0.15),
+            fault_seed=500 + seed, fault_policy=_policy())
+
+    cfg = DriverConfig(dtheta=1e-2, eta=0.5, mode="central", seed=seed)
+    p0 = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+    sample_fn = lambda i: batch                       # noqa: E731
+    cont = train_mgd(None, p0, cfg, sample_fn, 16,
+                     algorithm="probe_parallel_external", plant=farm(),
+                     chunk=4, log=None)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        train_mgd(None, p0, cfg, sample_fn, 8,
+                  algorithm="probe_parallel_external", plant=farm(),
+                  chunk=4, log=None, checkpoint_dir=ckpt_dir,
+                  checkpoint_every=8)
+        res = train_mgd(None, p0, cfg, sample_fn, 16,
+                        algorithm="probe_parallel_external", plant=farm(),
+                        chunk=4, log=None, checkpoint_dir=ckpt_dir)
+    exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(cont.params),
+                        jax.tree_util.tree_leaves(res.params)))
+    if not exact:
+        raise RuntimeError("farm resume through injected faults is not "
+                           "bit-exact to the uninterrupted run")
+    return {"bench": "fault_tolerance", "name": "resume_bitexact",
+            "value": 1.0 if exact else 0.0,
+            "detail": "8+8 resumed == 16 uninterrupted, faults injected at "
+                      "the same counter-keyed steps, healed by retries"}
+
+
+def run(seed: int = 0, smoke: bool = False):
+    steps = 400 if smoke else 2000
+    if os.environ.get("FAULT_TOLERANCE_STEPS"):
+        steps = int(os.environ["FAULT_TOLERANCE_STEPS"])
+    rows = _sweep_rows(seed, steps)
+    rows.append(_hang_row())
+    rows.append(_resume_row(seed))
+    return rows

@@ -30,6 +30,7 @@ BENCHES = [
     "fused_probe",
     "farm_scaling",
     "drift_aging",
+    "fault_tolerance",
     "roofline_report",
 ]
 

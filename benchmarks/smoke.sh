@@ -44,6 +44,9 @@ run python -m benchmarks.run --only fused_probe --seed 0 --out "$OUT"
 run python -m benchmarks.run --only farm_scaling --smoke --seed 0 --out "$OUT"
 # drift/aging: MGD re-trim vs scheduled recal vs no mitigation
 run python -m benchmarks.run --only drift_aging --smoke --seed 0 --out "$OUT"
+# fault tolerance: hangs/crashes/garbage masked, retried, quarantined
+run python -m benchmarks.run --only fault_tolerance --smoke --seed 0 --out "$OUT"
 run python examples/chip_in_the_loop.py --chips 4 --steps 300 --eval-every 150
 run python examples/chip_in_the_loop.py --drift 0.02 --steps 200 --eval-every 100
+run python examples/chip_in_the_loop.py --chips 4 --fault-rate 0.1 --steps 200 --eval-every 100
 echo "smoke OK"

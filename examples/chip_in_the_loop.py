@@ -29,9 +29,19 @@ reruns replay the identical aging.  MGD keeps probing the device where it
 actually is, so training holds up — the drift study proper lives in
 ``benchmarks/drift_aging.py``.
 
+``--fault-rate p`` makes the instrument(s) UNRELIABLE — counter-keyed
+transient crashes (and, on a farm, outlier readouts) injected through
+``FaultyChip`` — and arms the host boundary with a ``FaultPolicy``:
+timeouts, retry-with-backoff, and on a farm per-chip masking +
+quarantine + MAD outlier rejection.  Training rides through; the fault
+summary prints at the end.  The study proper lives in
+``benchmarks/fault_tolerance.py``.
+
     PYTHONPATH=src python examples/chip_in_the_loop.py
     PYTHONPATH=src python examples/chip_in_the_loop.py --chips 4
     PYTHONPATH=src python examples/chip_in_the_loop.py --drift 0.02
+    PYTHONPATH=src python examples/chip_in_the_loop.py --chips 4 \
+        --fault-rate 0.1
 """
 import argparse
 
@@ -39,8 +49,9 @@ import jax
 
 import repro
 from repro.data.tasks import nist7x7_batch
-from repro.hardware import (DriftingAnalogChip, ExternalPlant,
-                            SimulatedAnalogChip, simulated_chip_farm)
+from repro.hardware import (DriftingAnalogChip, ExternalPlant, FaultPolicy,
+                            FaultSpec, FaultyChip, SimulatedAnalogChip,
+                            simulated_chip_farm)
 from repro.models.simple import mlp_init
 
 SIZES = (49, 4, 4)
@@ -62,6 +73,10 @@ def main(argv=None):
     ap.add_argument("--drift", type=float, default=0.0, metavar="SIGMA_D",
                     help="per-step random-walk std of the stored weights "
                          "(aging chip; 0 = stable device)")
+    ap.add_argument("--fault-rate", type=float, default=0.0, metavar="P",
+                    help="per-readout fault probability (transient crashes "
+                         "+ outliers); arms the FaultPolicy host boundary "
+                         "(0 = reliable instrument, no policy)")
     args = ap.parse_args(argv)
     eta = args.eta if args.eta is not None else (
         0.1 if args.chips == 1 else 0.125 * args.chips)
@@ -70,6 +85,7 @@ def main(argv=None):
     # cond-free step (forward mode's C₀ refresh is a lax.cond).
     cfg = repro.DriverConfig(dtheta=2e-2, eta=eta, tau_theta=1,
                              mode="central", seed=0)
+    plant = None
     if args.chips == 1:
         if args.drift:
             chip = DriftingAnalogChip(SIZES, seed=0, sigma_a=0.15,
@@ -78,7 +94,13 @@ def main(argv=None):
         else:
             chip = SimulatedAnalogChip(SIZES, seed=0, sigma_a=0.15,
                                        sigma_theta=0.01, sigma_c=1e-4)
-        plant = ExternalPlant(chip)
+        device, policy = chip, None
+        if args.fault_rate:
+            # a single chip cannot be masked — retries must carry it
+            device = FaultyChip(chip, FaultSpec(transient=args.fault_rate),
+                                seed=99)
+            policy = FaultPolicy(timeout_s=10.0, retries=4, backoff_s=0.01)
+        plant = ExternalPlant(device, fault_policy=policy)
         mgd = repro.driver("discrete", cfg, plant=plant)
 
         def accuracy(params, batch):
@@ -88,9 +110,21 @@ def main(argv=None):
         def writes():
             return chip.writes
     else:
+        faults = policy = None
+        if args.fault_rate:
+            # half raising crashes, half silent outliers — masking,
+            # quarantine and MAD aggregation all get exercised
+            faults = FaultSpec(transient=args.fault_rate / 2,
+                               outlier=args.fault_rate / 2,
+                               outlier_scale=50.0)
+            policy = FaultPolicy(timeout_s=10.0, retries=4, backoff_s=0.01,
+                                 quarantine_after=6, reprobe_every=100,
+                                 aggregate="mad")
         farm = simulated_chip_farm(args.chips, SIZES, base_seed=0,
                                    sigma_a=0.15, sigma_theta=0.01,
-                                   sigma_c=1e-4, drift_rate=args.drift)
+                                   sigma_c=1e-4, drift_rate=args.drift,
+                                   faults=faults, fault_policy=policy)
+        plant = farm
         mgd = repro.driver("probe_parallel_external", cfg, plant=farm)
         accuracy = farm.measure_accuracy
 
@@ -117,6 +151,9 @@ def main(argv=None):
                   if args.drift else "")
     print(f"trained {args.chips} chip(s) through the opaque interface only "
           f"— no gradients, no defect model, no weight readback{drift_note}.")
+    if args.fault_rate:
+        print(f"fault-tolerance summary at fault rate "
+              f"{args.fault_rate:g}: {plant.fault_summary()}")
 
 
 if __name__ == "__main__":

@@ -392,7 +392,13 @@ def _build_probe_parallel_external(cfg, loss_fn, *, plant=None, probe_fn=None,
                                    mesh=None, total_params=None) -> MGDDriver:
     """Probe-parallel MGD over k EXTERNAL chips (the §6 chip farm): the
     same averaged update as ``probe_parallel``, fanned out host-side to a
-    ``hardware.farm.ChipFarm`` instead of a mesh axis."""
+    ``hardware.farm.ChipFarm`` instead of a mesh axis.
+
+    A farm armed with a ``hardware.FaultPolicy`` gains the fault-tolerant
+    step: failed/quarantined/outlier chips are masked out of the average
+    (η effectively rescaled by the live chip count — see
+    ``core.probe_parallel``) and the aux metrics gain ``n_valid`` /
+    ``n_used`` live-chip counts."""
     from repro.core.probe_parallel import build_probe_parallel_external_step
     from repro.hardware.farm import ChipFarm
 

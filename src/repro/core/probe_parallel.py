@@ -123,6 +123,42 @@ def build_probe_parallel_step(
     return step_fn
 
 
+def _mad_chip_mask(costs, valid, threshold):
+    """Robust outlier rejection over the 2k gathered cost scalars:
+    median-absolute-deviation gate, computed over VALID chips' readouts
+    only (invalid entries are NaN-ed out of the medians).  A chip is
+    kept when BOTH of its pair scalars sit within ``threshold`` robust
+    standard deviations of the median — a spiked-but-finite C₊ raises no
+    exception at the host boundary; only the statistics can reject it.
+    The MAD floor guards the degenerate all-equal case (MAD = 0)."""
+    flat = costs.reshape(-1)
+    vmask = jnp.repeat(valid, 2)
+    x = jnp.where(vmask, flat, jnp.nan)
+    med = jnp.nanmedian(x)
+    mad = jnp.nanmedian(jnp.abs(x - med))
+    scale = jnp.maximum(jnp.float32(1.4826) * mad,
+                        1e-6 * jnp.maximum(jnp.abs(med), 1.0))
+    ok = jnp.abs(flat - med) <= threshold * scale
+    return jnp.logical_and(valid, jnp.all(ok.reshape(-1, 2), axis=1))
+
+
+def _trimmed_chip_mask(c_tilde, valid, trim_frac):
+    """Symmetric trimmed mean as a mask: drop the ⌊trim_frac·k_valid⌋
+    largest and smallest C̃ values among the valid chips.  Rank-based
+    (argsort + inverse permutation), so it stays static-shape under jit;
+    invalid chips sort to the top (+inf key) and are excluded by the
+    ``ranks < n_valid − t`` cut as well as the final AND."""
+    k = c_tilde.shape[0]
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    t = jnp.floor(trim_frac * n_valid.astype(jnp.float32)).astype(jnp.int32)
+    key = jnp.where(valid, c_tilde, jnp.inf)
+    order = jnp.argsort(key)
+    ranks = jnp.zeros(k, jnp.int32).at[order].set(
+        jnp.arange(k, dtype=jnp.int32))
+    keep = jnp.logical_and(ranks >= t, ranks < n_valid - t)
+    return jnp.logical_and(valid, keep)
+
+
 def build_probe_parallel_external_step(
     cfg: MGDConfig,
     farm,
@@ -145,6 +181,22 @@ def build_probe_parallel_external_step(
     Chip k's probe seed is ``pod_seed(k)`` — the mesh driver's formula —
     and its readout tags are (2k, 2k+1), so counter-keyed device noise
     distinguishes every read and restarts replay deterministically.
+
+    **Fault masking / η-rescaling** (armed when the farm carries a
+    ``FaultPolicy``; the policy is read ONCE at build time, so the clean
+    path compiles to the historical minimal graph): the farm's
+    ``valid[k]`` mask — further tightened by a traced finiteness check
+    and the policy's robust aggregation mode (``"mad"`` /
+    ``"trimmed"``) — zeroes rejected chips' C̃_k while the per-chip
+    coefficient ``−η/(k·Δθ²)`` stays UNCHANGED.  Because η is tuned ∝ k,
+    dropping a chip's term at fixed η/k IS the "rescale η by the live
+    chip count" rule: the surviving chips apply exactly the
+    (η·k_live/k)-scaled masked average, degrading the step size
+    gracefully instead of corrupting the direction.  With every chip
+    valid, ``where(True, C̃, 0) ≡ C̃`` bitwise — the fault-tolerant
+    trajectory is bit-identical to the historical one.  Aux gains
+    ``n_valid`` (chips that answered with finite costs) and ``n_used``
+    (chips surviving robust aggregation).
     """
     from repro.hardware.farm import ChipFarm
     if not isinstance(farm, ChipFarm):
@@ -159,6 +211,9 @@ def build_probe_parallel_external_step(
             f'mode="central"')
     n_chips = farm.n_chips
     inv_d2 = 1.0 / (cfg.dtheta * cfg.dtheta)
+    # static at build time: a frozen FaultPolicy (or None) — the traced
+    # masking/aggregation branch is selected here, not per step
+    policy = getattr(farm, "policy", None)
 
     @jax.jit
     def step_fn(params, step, batch):
@@ -166,9 +221,37 @@ def build_probe_parallel_external_step(
         thetas = [pert.generate(
             params, ptype=cfg.ptype, step=step, seed=pod_seed(cfg.seed, k),
             dtheta=cfg.dtheta, tau_p=cfg.tau_p) for k in range(n_chips)]
-        costs = farm.read_cost_pairs(params, thetas, batch,
-                                     step=step)             # [k, 2]
-        all_c = (0.5 * (costs[:, 0] - costs[:, 1])).astype(jnp.float32)
+        costs, valid = farm.read_cost_pairs(params, thetas, batch,
+                                            step=step)    # [k, 2], [k]
+        c_raw = (0.5 * (costs[:, 0] - costs[:, 1])).astype(jnp.float32)
+        if policy is None:
+            all_c = c_raw
+            aux_cost = jnp.mean(0.5 * (costs[:, 0] + costs[:, 1]))
+            aux = {"cost": aux_cost.astype(jnp.float32),
+                   "c_tilde_mean": jnp.mean(jnp.abs(all_c))}
+        else:
+            # belt-and-braces: the host masks non-finite readouts already,
+            # but a masked chip's placeholder is NaN by construction —
+            # never let it through the arithmetic
+            valid = jnp.logical_and(valid,
+                                    jnp.all(jnp.isfinite(costs), axis=1))
+            if policy.aggregate == "mad":
+                used = _mad_chip_mask(costs, valid,
+                                      jnp.float32(policy.mad_threshold))
+            elif policy.aggregate == "trimmed":
+                used = _trimmed_chip_mask(c_raw, valid,
+                                          jnp.float32(policy.trim_frac))
+            else:
+                used = valid
+            all_c = jnp.where(used, c_raw, jnp.float32(0.0))
+            n_valid = jnp.sum(valid.astype(jnp.int32))
+            n_used = jnp.sum(used.astype(jnp.int32))
+            denom = jnp.maximum(n_used, 1).astype(jnp.float32)
+            aux_cost = jnp.sum(jnp.where(
+                used, 0.5 * (costs[:, 0] + costs[:, 1]), 0.0)) / denom
+            aux = {"cost": aux_cost.astype(jnp.float32),
+                   "c_tilde_mean": jnp.sum(jnp.abs(all_c)) / denom,
+                   "n_valid": n_valid, "n_used": n_used}
 
         def body(k, p):
             signs = pert.generate(
@@ -180,9 +263,7 @@ def build_probe_parallel_external_step(
         new_params = farm.write_params(
             jax.lax.fori_loop(0, n_chips, body, params),
             step=step, prev=params)
-        cost = jnp.mean(0.5 * (costs[:, 0] + costs[:, 1]))
-        return new_params, {"cost": cost.astype(jnp.float32),
-                            "c_tilde_mean": jnp.mean(jnp.abs(all_c))}
+        return new_params, aux
 
     return step_fn
 

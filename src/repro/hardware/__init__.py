@@ -14,12 +14,21 @@ the ``Plant`` protocol:
 See ``base.py`` for the protocol contract and ``devices.py`` for
 per-device-seed builders (defective MLPs, simulated analog chips —
 including the drifting chip variant for the external boundary).
+
+``faults.py`` is the robustness layer for the external boundary:
+``FaultyChip`` injects counter-keyed reproducible faults (hangs,
+crashes, NaNs, outliers) over any device, and ``FaultPolicy`` arms
+``ExternalPlant``/``ChipFarm`` with timeouts, retries, per-chip
+masking, quarantine and robust aggregation.
 """
 from .base import IdealPlant, Plant, PlantMeta
 from .devices import (DriftingAnalogChip, SimulatedAnalogChip,
                       mlp_device_fns, noisy_mlp_plant, quantized_mlp_plant)
 from .external import ExternalPlant
 from .farm import ChipFarm, simulated_chip_farm
+from .faults import (DEFAULT_TIMEOUT_S, ChipFaultError, ChipHealth,
+                     FarmHealth, FaultEvent, FaultLog, FaultPolicy,
+                     FaultSpec, FaultyChip, InjectedFault)
 from .plants import (DriftingPlant, NoisyPlant, QuantizedPlant,
                      plant_from_config)
 
@@ -28,4 +37,7 @@ __all__ = [
     "DriftingPlant", "ExternalPlant", "ChipFarm", "plant_from_config",
     "SimulatedAnalogChip", "DriftingAnalogChip", "mlp_device_fns",
     "noisy_mlp_plant", "quantized_mlp_plant", "simulated_chip_farm",
+    "ChipFaultError", "ChipHealth", "DEFAULT_TIMEOUT_S", "FarmHealth",
+    "FaultEvent", "FaultLog", "FaultPolicy", "FaultSpec", "FaultyChip",
+    "InjectedFault",
 ]

@@ -67,6 +67,9 @@ class PlantMeta:
     drift_rate: float = 0.0          # σ_d, per-step random-walk std
     drift_tau: float = 0.0           # relaxation τ toward drift_rest (steps)
     drift_rest: float = 0.0          # rest value the weights decay toward
+    # True → the host boundary is armed with a FaultPolicy (timeouts,
+    # retries, per-chip masking); see hardware.faults.
+    fault_tolerant: bool = False
 
     def step_latency_s(self, reads_per_step: int = 2,
                        writes_per_step: int = 1) -> float:

@@ -43,10 +43,22 @@ the host loop driving the chip, not inside the traced step.
 Host devices must be NUMPY-PURE: a callback that dispatches JAX ops can
 deadlock against the in-flight XLA program that invoked it (two threads
 feeding one CPU client) — see ``devices.SimulatedAnalogChip``.
+
+Real instruments hang and crash, not just add noise.  Passing
+``fault_policy=FaultPolicy(...)`` bounds every device transaction by a
+timeout and retries it with exponential backoff; because readout noise
+is counter-keyed on (step, tag), a successful retry is bit-identical to
+the read a fault-free run would have produced, so checkpoint/resume
+stays exact through transient faults.  A single external chip that
+exhausts its retries raises ``ChipFaultError`` with the device name and
+counters attached (masking out a failed read needs a farm — see
+``farm.ChipFarm``).
 """
 from __future__ import annotations
 
 import inspect
+import weakref
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Optional
 
 import jax
@@ -54,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import Plant, PlantMeta
+from .faults import ChipFaultError, FaultLog, FaultPolicy, guarded_call
 
 try:                                    # jax >= 0.4.9
     from jax.experimental import io_callback as _io_callback
@@ -98,14 +111,34 @@ def check_device(device: Any) -> None:
 
 
 class ExternalPlant(Plant):
-    """Host-callback boundary around an opaque device object."""
+    """Host-callback boundary around an opaque device object.
 
-    def __init__(self, device: Any, *, meta: Optional[PlantMeta] = None):
+    **Fault tolerance** (``fault_policy=hardware.FaultPolicy(...)``):
+    every device transaction (write + read, as one unit) runs on a side
+    thread bounded by ``timeout_s`` and retried with exponential backoff
+    — a retry re-runs the whole transaction against the same (step, tag)
+    counters, so a successful retry returns the identical counter-keyed
+    readout a fault-free run would have seen.  A single chip has no
+    farm to mask it, so exhausting the retries raises ``ChipFaultError``
+    (naming the device, step and tag) instead of hanging or surfacing an
+    anonymous worker traceback.  Without a policy, device exceptions are
+    still re-raised with the device name attached.
+    """
+
+    def __init__(self, device: Any, *, meta: Optional[PlantMeta] = None,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 fault_log: Optional[FaultLog] = None):
         check_device(device)
         if _io_callback is None:        # pragma: no cover - old jax
             raise RuntimeError("ExternalPlant needs jax.experimental."
                                "io_callback (jax >= 0.4.9)")
+        if fault_policy is not None and not isinstance(fault_policy,
+                                                       FaultPolicy):
+            raise TypeError(f"fault_policy must be a hardware.FaultPolicy, "
+                            f"got {type(fault_policy).__name__}")
         self.device = device
+        self.policy = fault_policy
+        self.fault_log = fault_log if fault_log is not None else FaultLog()
         # capability inspection happens here, once — not per read
         self._measure_counters = accepts_counters(device.measure_cost)
         self._write_step = accepts_step(device.set_params)
@@ -113,7 +146,26 @@ class ExternalPlant(Plant):
         self._measure_pair = pair if callable(pair) else None
         self._pair_counters = (self._measure_pair is not None
                                and accepts_counters(self._measure_pair))
-        self.meta = meta or PlantMeta(name="external", external=True)
+        self._label = (f"device {getattr(device, 'name', None) or ''}"
+                       f"({type(device).__name__})").replace(" (", "(")
+        self._attempt_pool = None
+        if fault_policy is not None:
+            # attempt threads: hung attempts hold a worker until their
+            # sleep releases, so keep spares beyond retries+1
+            self._attempt_pool = ThreadPoolExecutor(
+                max_workers=fault_policy.retries + 2,
+                thread_name_prefix="ext-plant")
+            self._finalizer = weakref.finalize(
+                self, self._attempt_pool.shutdown, wait=False)
+        self.meta = meta or PlantMeta(
+            name="external", external=True,
+            fault_tolerant=fault_policy is not None)
+
+    def fault_summary(self) -> dict:
+        """Fault telemetry (events by kind) — empty dict means a clean
+        run."""
+        n = len(self.fault_log)
+        return {"events": n, "by_kind": self.fault_log.counts()} if n else {}
 
     def _set_params(self, params, step):
         """One persistent device write, timestamped for step-capable
@@ -123,12 +175,38 @@ class ExternalPlant(Plant):
         else:
             self.device.set_params(params)
 
-    def _host_read(self, params, batch, step, tag):
+    def _guarded(self, fn, args, step, tag):
+        """One transaction under the fault policy; raises ChipFaultError
+        with full context after exhausting the retries."""
+        out, _, err = guarded_call(
+            self._attempt_pool, fn, args, policy=self.policy,
+            label=self._label, log=self.fault_log, step=step, tag=tag)
+        if err is not None:
+            self.fault_log.record("retry-exhausted", self._label,
+                                  step=step, tag=tag, detail=str(err))
+            raise ChipFaultError(
+                f"{self._label}: transaction failed after "
+                f"{self.policy.retries + 1} attempts at step={step} "
+                f"tag={tag}: {err}") from err
+        return out
+
+    def _read_txn(self, params, batch, step, tag):
         self._set_params(params, step)
         if self._measure_counters:
             return np.float32(self.device.measure_cost(
                 batch, step=int(step), tag=int(tag)))
         return np.float32(self.device.measure_cost(batch))
+
+    def _host_read(self, params, batch, step, tag):
+        if self.policy is not None:
+            return np.float32(self._guarded(
+                self._read_txn, (params, batch, step, tag), step, tag))
+        try:
+            return self._read_txn(params, batch, step, tag)
+        except Exception as e:
+            raise ChipFaultError(
+                f"{self._label}: read failed at step={int(step)} "
+                f"tag={int(tag)}: {e}") from e
 
     def read_cost(self, params, batch, *, step, tag: int = 0):
         return _io_callback(
@@ -136,7 +214,7 @@ class ExternalPlant(Plant):
             params, batch, jnp.asarray(step, jnp.int32),
             jnp.asarray(tag, jnp.int32), ordered=True)
 
-    def _host_read_pair(self, params, theta, batch, step, tag):
+    def _pair_txn(self, params, theta, batch, step, tag):
         # ONE persistent write of the base θ; the antithetic pair rides
         # the device's transient probe line (no second full-tree write).
         self._set_params(params, step)
@@ -146,6 +224,17 @@ class ExternalPlant(Plant):
         else:
             c_plus, c_minus = self._measure_pair(theta, batch)
         return np.asarray([c_plus, c_minus], np.float32)
+
+    def _host_read_pair(self, params, theta, batch, step, tag):
+        if self.policy is not None:
+            return self._guarded(
+                self._pair_txn, (params, theta, batch, step, tag), step, tag)
+        try:
+            return self._pair_txn(params, theta, batch, step, tag)
+        except Exception as e:
+            raise ChipFaultError(
+                f"{self._label}: pair read failed at step={int(step)} "
+                f"tag={int(tag)}: {e}") from e
 
     def read_cost_pair(self, params, theta, batch, *, step, tag: int = 0):
         """Antithetic readout C(θ±θ̃).  Devices with a differential probe
@@ -161,9 +250,19 @@ class ExternalPlant(Plant):
             jnp.asarray(tag, jnp.int32), ordered=True)
         return out[0], out[1]
 
-    def _host_write(self, params, step):
+    def _write_txn(self, params, step):
         self._set_params(params, step)
         return np.int32(0)
+
+    def _host_write(self, params, step):
+        if self.policy is not None:
+            return self._guarded(self._write_txn, (params, step), step, -1)
+        try:
+            return self._write_txn(params, step)
+        except Exception as e:
+            raise ChipFaultError(
+                f"{self._label}: write failed at step={int(step)}: {e}"
+            ) from e
 
     def write_params(self, params, *, step, prev=None):
         """Commit the post-update parameters to the chip.  The trainer's

@@ -14,14 +14,44 @@ instrument* boundary the optimizer cannot trace into:
 
 * ``read_cost_pairs(params, thetas, batch, step)`` lowers to ONE ordered
   ``io_callback`` per step that fans the k central-difference pairs out
-  to the k devices on a thread pool and gathers all 2k cost scalars —
-  the only values that ever cross back.
+  to the k devices on a thread pool and gathers all 2k cost scalars plus
+  a per-chip validity mask — the only values that ever cross back.
 * Each chip sees the optimizer's (step, tag=2k/2k+1) counters when its
   readout accepts them, so counter-keyed device noise distinguishes
   every read and two identically-seeded runs are bit-identical.
 * Devices with a differential probe line (``measure_pair``) pay one
   persistent base-θ write per pair; plain 2-method devices fall back to
   two perturbed-tree writes (see ``external.py``).
+
+**Fault tolerance** (``fault_policy=hardware.FaultPolicy(...)``): real
+instruments hang, crash and return garbage, and k chips multiply that
+fault surface by k.  Under a policy every chip's probe transaction runs
+bounded by ``timeout_s`` with retry-and-exponential-backoff; a chip that
+exhausts its retries (or returns non-finite costs) is MASKED for that
+step rather than unwinding the jitted step: ``read_cost_pairs`` always
+returns the fixed-shape pair ``(f32[k, 2] costs, bool[k] valid)`` so the
+traced program stays static-shape.  Invalid chips carry NaN costs and
+``valid[k]=False``.  Persistently failing chips (``quarantine_after``
+consecutive exhausted rounds) are quarantined — skipped with NO I/O on
+the probe path, still receiving parameter writes — and re-probed every
+``reprobe_every`` steps for readmission; a readmitted chip's
+counter-keyed noise stream is untouched (noise is a function of
+(step, tag), not of how many reads happened in between).
+
+**Mask semantics / η-rescaling rule** (``core.probe_parallel``): the
+traced step zeroes invalid chips' C̃_k and keeps the per-chip coefficient
+``−η/(k·Δθ²)`` unchanged.  Because η is tuned ∝ k (the farm's k× probe
+averaging supports a k× larger step), dropping a chip's term at fixed
+η/k IS the "rescale η by the live chip count" rule applied per chip:
+the surviving chips' update is exactly the (η·k_live/k)-scaled masked
+average.  With all chips valid the masked path is bit-identical to the
+unmasked one (``where(True, x, 0) == x`` bitwise).
+
+Even WITHOUT a policy, gathers at the host boundary pass a generous
+default timeout (``faults.DEFAULT_TIMEOUT_S``) and re-raise worker
+exceptions as ``ChipFaultError`` with the chip index and device name
+attached — a hung instrument surfaces as a diagnosable error instead of
+an un-interruptible deadlock inside an ordered callback.
 
 Everything host-side is NUMPY-PURE (JAX ops inside a host callback can
 deadlock the CPU client — see ``external.py``); each chip's noise is its
@@ -42,6 +72,14 @@ from .base import Plant, PlantMeta
 from .devices import DriftingAnalogChip, SimulatedAnalogChip
 from .external import (_io_callback, accepts_counters, accepts_step,
                        check_device)
+from .faults import (DEFAULT_TIMEOUT_S, ChipFaultError, FarmHealth,
+                     FaultLog, FaultPolicy, FaultSpec, FaultyChip,
+                     guarded_call)
+
+#: Fixed-shape placeholder for a masked-out chip's cost pair — NaN, so a
+#: bug that consumes an invalid pair without checking the mask poisons
+#: the update loudly instead of silently biasing it.
+_INVALID_PAIR = np.array([np.nan, np.nan], np.float32)
 
 
 def _np_axpy(sign, theta, params):
@@ -57,11 +95,19 @@ class ChipFarm(Plant):
     Driven exclusively by ``repro.driver("probe_parallel_external", cfg,
     plant=farm)`` — the farm has no single-scalar ``read_cost`` (wrap one
     device in ``ExternalPlant`` for the single-chip drivers).
+
+    ``fault_policy`` arms the host boundary: per-attempt timeouts,
+    retries with exponential backoff, per-chip masking on exhaustion,
+    quarantine/readmission via the ``health`` registry, and the robust
+    aggregation mode ``core.probe_parallel`` reads at build time.  See
+    the module docstring for the mask semantics and η-rescaling rule.
     """
 
     def __init__(self, devices: Sequence[Any], *,
                  meta: Optional[PlantMeta] = None,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 fault_log: Optional[FaultLog] = None):
         devices = list(devices)
         if not devices:
             raise ValueError("ChipFarm needs at least one device")
@@ -70,17 +116,30 @@ class ChipFarm(Plant):
         if _io_callback is None:        # pragma: no cover - old jax
             raise RuntimeError("ChipFarm needs jax.experimental."
                                "io_callback (jax >= 0.4.9)")
+        if fault_policy is not None and not isinstance(fault_policy,
+                                                       FaultPolicy):
+            raise TypeError(f"fault_policy must be a hardware.FaultPolicy, "
+                            f"got {type(fault_policy).__name__}")
         self.devices = devices
+        self.policy = fault_policy
+        self.fault_log = fault_log if fault_log is not None else FaultLog()
+        self._names = [getattr(d, "name", None) or type(d).__name__
+                       for d in devices]
+        self.health = FarmHealth(self._names)
         # capability inspection once per device, never on the hot loop
         self._caps = []
         for device in devices:
             pair = getattr(device, "measure_pair", None)
             pair = pair if callable(pair) else None
+            acc = getattr(device, "measure_accuracy", None)
+            acc = acc if callable(acc) else None
             self._caps.append({
                 "counters": accepts_counters(device.measure_cost),
                 "pair": pair,
                 "pair_counters": pair is not None and accepts_counters(pair),
                 "write_step": accepts_step(device.set_params),
+                "acc": acc,
+                "acc_step": acc is not None and accepts_step(acc),
             })
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers or len(devices),
@@ -90,16 +149,41 @@ class ChipFarm(Plant):
         # would otherwise accumulate until interpreter exit
         self._finalizer = weakref.finalize(self, self._pool.shutdown,
                                            wait=False)
+        self._attempt_pool = None
+        if fault_policy is not None:
+            # two-level pools: supervisors block on attempt futures, and a
+            # hung attempt holds its worker until the instrument releases
+            # it — spare attempt threads keep retries and later steps from
+            # starving behind a zombie
+            self._attempt_pool = ThreadPoolExecutor(
+                max_workers=len(devices) * (fault_policy.retries + 2),
+                thread_name_prefix="chip-farm-attempt")
+            self._attempt_finalizer = weakref.finalize(
+                self, self._attempt_pool.shutdown, wait=False)
         self.meta = meta or PlantMeta(name=f"chip-farm-{len(devices)}",
-                                      external=True, chips=len(devices))
+                                      external=True, chips=len(devices),
+                                      fault_tolerant=fault_policy is not None)
 
     def close(self) -> None:
-        """Shut the thread pool down now (also runs at GC)."""
+        """Shut the thread pools down now (also runs at GC)."""
         self._finalizer()
+        if self._attempt_pool is not None:
+            self._attempt_finalizer()
 
     @property
     def n_chips(self) -> int:
         return len(self.devices)
+
+    def _label(self, i: int) -> str:
+        return f"chip {i} ({self._names[i]})"
+
+    def fault_summary(self) -> dict:
+        """Fault-tolerance telemetry: event counts by kind plus the
+        health registry summary.  ``{"events": 0, ...}`` means a clean
+        run."""
+        return {"events": len(self.fault_log),
+                "by_kind": self.fault_log.counts(),
+                **self.health.summary()}
 
     # -- host side (numpy-pure, runs on the callback + pool threads) --------
 
@@ -130,20 +214,95 @@ class ChipFarm(Plant):
         return (read(_np_axpy(1.0, theta, params), tag),
                 read(_np_axpy(-1.0, theta, params), tag + 1))
 
+    def _chip_pair_robust(self, i, params, theta, batch, step):
+        """One chip's probe round under the fault policy (supervisor
+        thread): quarantine fast-path, guarded attempts with retries,
+        health bookkeeping.  Returns ``(f32[2] pair, valid)`` — never
+        raises."""
+        policy, h = self.policy, self.health.chips[i]
+        if h.skip(step):
+            # quarantined, not yet due a readmission probe: NO I/O
+            return _INVALID_PAIR, False
+        out, latency, err = guarded_call(
+            self._attempt_pool, self._chip_pair,
+            (i, params, theta, batch, step),
+            policy=policy, label=self._label(i), log=self.fault_log,
+            health=h, step=step, tag=2 * i)
+        if err is None:
+            if h.quarantined:
+                h.readmit()
+                self.fault_log.record("readmit", self._label(i), step=step)
+            h.record_success(latency, policy.latency_alpha)
+            return np.asarray(out, np.float32), True
+        h.record_failure()
+        if h.quarantined:
+            # failed readmission probe — back off until the next one
+            h.next_reprobe = int(step) + policy.reprobe_every
+        elif policy.quarantine_after and \
+                h.consecutive_failures >= policy.quarantine_after:
+            h.enter_quarantine(step, policy)
+            self.fault_log.record(
+                "quarantine", self._label(i), step=step,
+                detail=f"{h.consecutive_failures} consecutive failures")
+        return _INVALID_PAIR, False
+
     def _host_pairs(self, params, thetas, batch, step):
         step = int(step)
+        k = self.n_chips
+        if self.policy is None:
+            futures = [
+                self._pool.submit(self._chip_pair, i, params, thetas[i],
+                                  batch, step)
+                for i in range(k)
+            ]
+            pairs = []
+            # gather in chip order — the schedule cannot reorder results
+            for i, f in enumerate(futures):
+                try:
+                    pairs.append(f.result(timeout=DEFAULT_TIMEOUT_S))
+                except Exception as e:
+                    raise ChipFaultError(
+                        f"{self._label(i)}: probe failed at step={step}: "
+                        f"{e!r} — pass fault_policy=FaultPolicy(...) to "
+                        f"retry and mask instead of failing the step"
+                    ) from e
+            return np.asarray(pairs, np.float32), np.ones(k, bool)
         futures = [
-            self._pool.submit(self._chip_pair, i, params, thetas[i],
+            self._pool.submit(self._chip_pair_robust, i, params, thetas[i],
                               batch, step)
-            for i in range(self.n_chips)
+            for i in range(k)
         ]
-        # gather in chip order — the schedule cannot reorder results
-        return np.asarray([f.result() for f in futures], np.float32)
+        deadline = self.policy.round_deadline_s()
+        costs = np.empty((k, 2), np.float32)
+        valid = np.zeros(k, bool)
+        for i, f in enumerate(futures):
+            try:
+                pair, ok = f.result(timeout=deadline)
+            except Exception as e:  # supervisor failure — mask, keep going
+                self.fault_log.record("error", self._label(i), step=step,
+                                      detail=f"supervisor: {e}")
+                pair, ok = _INVALID_PAIR, False
+            costs[i] = pair
+            valid[i] = ok
+        return costs, valid
 
     def _host_write(self, params, step):
-        for f in [self._pool.submit(self._set_params, i, params, step)
-                  for i in range(self.n_chips)]:
-            f.result()
+        step = int(step)
+        futures = [self._pool.submit(self._set_params, i, params, step)
+                   for i in range(self.n_chips)]
+        for i, f in enumerate(futures):
+            try:
+                f.result(timeout=DEFAULT_TIMEOUT_S)
+            except Exception as e:
+                if self.policy is None:
+                    raise ChipFaultError(
+                        f"{self._label(i)}: parameter write failed at "
+                        f"step={step}: {e!r}") from e
+                # under a policy a failed write must not unwind the step;
+                # the chip keeps its stale parameters and the next probe
+                # round surfaces (and masks) the damage
+                self.fault_log.record("write-error", self._label(i),
+                                      step=step, detail=str(e))
         return np.int32(0)
 
     # -- traced side ---------------------------------------------------------
@@ -151,13 +310,16 @@ class ChipFarm(Plant):
     def read_cost_pairs(self, params, thetas, batch, *, step):
         """All k chips' antithetic pairs in one ordered host round-trip.
         ``thetas`` is the list of k perturbation trees (chip k probes its
-        own θ̃_k); returns an f32[k, 2] array of (C₊, C₋) per chip."""
+        own θ̃_k); returns ``(f32[k, 2] costs, bool[k] valid)``.  Without
+        a fault policy ``valid`` is all-True (any failure raises); with
+        one, masked chips carry NaN costs and ``valid=False``."""
         if len(thetas) != self.n_chips:
             raise ValueError(f"{len(thetas)} probe trees for "
                              f"{self.n_chips} chips")
         return _io_callback(
             self._host_pairs,
-            jax.ShapeDtypeStruct((self.n_chips, 2), jnp.float32),
+            (jax.ShapeDtypeStruct((self.n_chips, 2), jnp.float32),
+             jax.ShapeDtypeStruct((self.n_chips,), jnp.bool_)),
             params, thetas, batch, jnp.asarray(step, jnp.int32),
             ordered=True)
 
@@ -169,28 +331,61 @@ class ChipFarm(Plant):
 
     def write_params(self, params, *, step, prev=None):
         """Commit the post-update parameters to EVERY chip (open-loop, as
-        in ``ExternalPlant``: per-chip write noise stays invisible)."""
+        in ``ExternalPlant``: per-chip write noise stays invisible).
+        Quarantined chips are still written — writes are cheap and keep
+        them current for readmission."""
         _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
                      params, jnp.asarray(step, jnp.int32), ordered=True)
         return params
 
     # -- evaluation harness (eager, never inside the traced step) ------------
 
-    def measure_accuracy(self, params, batch) -> float:
+    def measure_accuracy(self, params, batch, *, step=None) -> float:
         """Mean on-chip accuracy across the farm after committing
-        ``params`` — the experimenter's bench readout, not training I/O."""
+        ``params`` — the experimenter's bench readout, not training I/O.
+
+        Writes route through ``_set_params`` with ``step`` forwarded, so
+        eval-time writes to step-capable drifting chips are timestamped
+        (a bench readout of an aging chip must not silently reset its
+        age).  Under a fault policy, quarantined chips are excluded from
+        the bench average and per-chip errors are logged and skipped
+        (falling back to all chips if every one is quarantined)."""
         params = jax.tree_util.tree_map(
             lambda x: np.asarray(x, np.float32), params)
 
-        def one(device):
-            device.set_params(params)
-            return device.measure_accuracy(batch)
+        def one(i):
+            self._set_params(i, params, step)
+            if self._caps[i]["acc_step"]:
+                return self._caps[i]["acc"](
+                    batch, step=None if step is None else int(step))
+            return self._caps[i]["acc"](batch)
 
-        futures = [self._pool.submit(one, d) for d in self.devices
-                   if callable(getattr(d, "measure_accuracy", None))]
-        if not futures:
+        capable = [i for i in range(self.n_chips)
+                   if self._caps[i]["acc"] is not None]
+        if not capable:
             raise NotImplementedError("no device exposes measure_accuracy")
-        return float(np.mean([f.result() for f in futures]))
+        indices = capable
+        if self.policy is not None:
+            live = [i for i in capable
+                    if not self.health.chips[i].quarantined]
+            indices = live or capable
+        futures = {i: self._pool.submit(one, i) for i in indices}
+        values = []
+        for i, f in futures.items():
+            try:
+                values.append(f.result(timeout=DEFAULT_TIMEOUT_S))
+            except Exception as e:
+                if self.policy is None:
+                    raise ChipFaultError(
+                        f"{self._label(i)}: accuracy readout failed: "
+                        f"{e!r}") from e
+                self.fault_log.record("accuracy-error", self._label(i),
+                                      step=step, detail=str(e))
+        if not values:
+            raise ChipFaultError(
+                "no chip produced an accuracy readout "
+                f"(all {len(indices)} attempts failed)")
+        return float(np.mean(values))
 
     @property
     def total_writes(self) -> int:
@@ -204,7 +399,10 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
                         drift_rate: float = 0.0,
                         drift_rates: Optional[Sequence[float]] = None,
                         drift_mode: str = "walk", drift_tau: float = 0.0,
-                        max_workers: Optional[int] = None) -> ChipFarm:
+                        max_workers: Optional[int] = None,
+                        faults=None, fault_seed: int = 1000,
+                        fault_policy: Optional[FaultPolicy] = None
+                        ) -> ChipFarm:
     """A farm of k ``SimulatedAnalogChip``s with DISTINCT device seeds —
     k different physical chips (different defect draws, different noise
     streams), the same instrument replicated k× on the bench.
@@ -214,7 +412,15 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
     ``DriftingAnalogChip``s instead; aging stays per-device-seed keyed,
     so two chips with different rates remain distinguishable across a
     checkpoint/resume.  Zero-rate chips stay plain (bit-identical to the
-    drift-free farm)."""
+    drift-free farm).
+
+    ``faults`` injects counter-keyed faults: a single ``FaultSpec``
+    (every chip, per-chip fault seeds ``fault_seed + i``) or a k-long
+    sequence with ``None`` entries for healthy chips.  ``fault_policy``
+    arms the boundary (timeouts/retries/masking/quarantine) — the two
+    compose but neither requires the other: inject faults with no policy
+    to demonstrate the failure mode, or arm a policy over healthy chips
+    at near-zero cost."""
     if k < 1:
         raise ValueError(f"need at least one chip, got k={k}")
     if drift_rates is None:
@@ -233,11 +439,28 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
                            drift_tau=drift_tau)
         for i in range(k)
     ]
+    fault_log = FaultLog()
+    if faults is not None:
+        specs = list(faults) if isinstance(faults, (list, tuple)) \
+            else [faults] * k
+        if len(specs) != k:
+            raise ValueError(f"{len(specs)} fault specs for {k} chips")
+        for spec in specs:
+            if spec is not None and not isinstance(spec, FaultSpec):
+                raise TypeError(f"faults entries must be FaultSpec or "
+                                f"None, got {type(spec).__name__}")
+        devices = [
+            FaultyChip(d, spec, seed=fault_seed + i, log=fault_log)
+            if spec is not None else d
+            for i, (d, spec) in enumerate(zip(devices, specs))
+        ]
     drifting = any(rates) or drift_tau
     return ChipFarm(
-        devices, max_workers=max_workers,
+        devices, max_workers=max_workers, fault_policy=fault_policy,
+        fault_log=fault_log,
         meta=PlantMeta(name=f"sim-farm-{k}" + ("-drift" if drifting else ""),
                        cost_noise=sigma_c, write_noise=sigma_theta,
                        sigma_a=sigma_a, external=True, chips=k,
                        drift_mode=drift_mode if drifting else None,
-                       drift_rate=max(rates), drift_tau=drift_tau))
+                       drift_rate=max(rates), drift_tau=drift_tau,
+                       fault_tolerant=fault_policy is not None))

@@ -233,6 +233,14 @@ def train_mgd(
             ckpt.save(checkpoint_dir, done, _ckpt_tree(params, state),
                       extra={"algo": drv.algorithm,
                              "seed": int(getattr(drv.config, "seed", 0))})
+    # fault-tolerant plants (ExternalPlant/ChipFarm with a FaultPolicy)
+    # expose a telemetry summary — surface it once so a run that survived
+    # faults says so instead of looking clean
+    fault_summary = getattr(drv.plant, "fault_summary", None)
+    if log and callable(fault_summary):
+        summary = fault_summary()
+        if summary.get("events"):
+            log(f"[mgd] fault-tolerance summary: {summary}")
     return TrainResult(params, state, history, done)
 
 

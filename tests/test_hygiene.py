@@ -1,0 +1,34 @@
+"""Source-hygiene guards (grep-based, no imports of the checked code).
+
+The deadlock class this PR removed — a ``concurrent.futures`` gather
+with no timeout inside an ordered ``io_callback``, where one hung
+instrument freezes training forever and Ctrl-C barely works — must not
+silently reappear: every ``.result(...)`` in ``src/repro/hardware/``
+has to pass an explicit timeout.
+"""
+import pathlib
+import re
+
+HARDWARE_DIR = (pathlib.Path(__file__).resolve().parent.parent
+                / "src" / "repro" / "hardware")
+
+
+def test_every_future_gather_in_hardware_has_a_timeout():
+    offenders = []
+    for path in sorted(HARDWARE_DIR.glob("*.py")):
+        src = path.read_text()
+        for match in re.finditer(r"\.result\(([^)]*)\)", src):
+            if "timeout" not in match.group(1):
+                line = src[:match.start()].count("\n") + 1
+                offenders.append(f"{path.name}:{line}: {match.group(0)}")
+    assert not offenders, (
+        "concurrent.futures result-gathers without an explicit timeout "
+        "(a hung instrument would deadlock the ordered io_callback):\n"
+        + "\n".join(offenders))
+
+
+def test_hardware_sources_exist():
+    # the guard above must actually be scanning something
+    assert (HARDWARE_DIR / "farm.py").is_file()
+    assert (HARDWARE_DIR / "external.py").is_file()
+    assert (HARDWARE_DIR / "faults.py").is_file()
