@@ -57,6 +57,15 @@ TOLERANCES = [
     ("farm_scaling", "variance_ratio_*", dict(rel=0.5)),
     ("farm_scaling", "nist7x7_k*_accuracy", dict(abs=0.15, direction="min")),
     ("farm_scaling", "projected_*", dict(rel=0.01)),
+    # farm backends — process farms must stay flat in k (max: a RISING
+    # step-time ratio is the regression), keep their pipeline utilization
+    # (min), and keep beating the GIL-serialized thread farm (min).
+    # steps_per_s_* rows stay informational (machine-dependent).
+    ("farm_scaling", "wallclock_flat_*", dict(rel=0.30, direction="max")),
+    ("farm_scaling", "pipeline_utilization_*",
+     dict(abs=0.15, direction="min")),
+    ("farm_scaling", "thread_over_process_*",
+     dict(rel=0.50, direction="min")),
     # fused_probe — only the arithmetic W-read identities gate; the
     # steps/s rows are machine-dependent and stay informational
     ("fused_probe", "*_wread_ratio", dict(rel=0.001)),

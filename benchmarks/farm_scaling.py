@@ -14,8 +14,19 @@ cfg, plant=ChipFarm(...))``:
 * **Wall-clock projection** — ``PlantMeta.step_latency_s`` with per-chip
   read counts: a single chip probing k times serially pays 2k reads per
   step; the k-chip farm pays 2 (concurrent pairs), Table-3 style.
+* **Measured backend throughput** — steps/s through REAL farms of
+  GIL-holding chips (``py_busy_ms``: the honest pure-Python-instrument-
+  driver model) on the thread vs process backends with the
+  double-buffered pipeline on.  The thread backend serializes (k chips →
+  ~k× single-chip step time); the process backend stays flat in k and
+  reports its measured pipeline utilization (device-busy seconds /
+  k × wall).  ``python -m benchmarks.farm_scaling --backend process
+  --smoke`` runs just one backend's sweep.
 """
 from __future__ import annotations
+
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +43,7 @@ from .common import median
 
 KS = (1, 2, 4, 8)
 N_SEEDS = 3
+THROUGHPUT_BACKENDS = ("thread", "process")
 
 
 # Two chip flavors for the variance law: MATCHED chips (no defects, no
@@ -142,6 +154,84 @@ def _latency_rows(ks):
     return rows
 
 
+def _throughput_rows(ks, smoke, backends=THROUGHPUT_BACKENDS):
+    """Measured steps/s through py_busy_ms farms per backend, pipeline
+    on.  The chip holds the GIL for ``busy_ms`` per readout conversion
+    (2 per central pair), so the thread backend serializes across chips
+    while the process backend — one GIL per worker — stays flat in k."""
+    # smoke keeps ks small but busy_ms high enough that device work
+    # dominates per-step overhead — the gated flatness/utilization
+    # ratios stay stable across differently-loaded CI machines
+    busy_ms = 25.0 if smoke else 50.0
+    n_steps = 8 if smoke else 16
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+    params = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+    cfg = DriverConfig(dtheta=1e-2, eta=0.5, mode="central", seed=0)
+    cores = len(os.sched_getaffinity(0))
+    rows = []
+    step_s = {}           # (backend, k) -> measured seconds per step
+    util = {}             # (backend, k) -> pipeline utilization
+    for backend in backends:
+        for k in ks:
+            with simulated_chip_farm(k, (2, 2, 1), base_seed=0,
+                                     sigma_a=0.0, sigma_theta=0.0,
+                                     sigma_c=1e-3, py_busy_ms=busy_ms,
+                                     backend=backend,
+                                     pipeline=True) as farm:
+                mgd = driver("probe_parallel_external", cfg, plant=farm)
+                p, s = params, mgd.init(params)
+                for _ in range(3):                 # compile + worker warmup
+                    p, s, _ = mgd.step(p, s, batch)
+                # steps dispatch asynchronously: block on the outputs
+                # before fencing/timing, or the host races its own farm
+                jax.block_until_ready((p, s))
+                farm.fence()
+                b0 = farm.backend.busy_seconds()
+                t0 = time.perf_counter()
+                for _ in range(n_steps):
+                    p, s, _ = mgd.step(p, s, batch)
+                jax.block_until_ready((p, s))
+                farm.fence()
+                wall = time.perf_counter() - t0
+                busy = farm.backend.busy_seconds() - b0
+            step_s[backend, k] = wall / n_steps
+            util[backend, k] = busy / (wall * k) if wall else 0.0
+            rows.append({
+                "bench": "farm_scaling",
+                "name": f"steps_per_s_{backend}_k{k}",
+                "value": n_steps / wall,
+                "detail": f"{1e3 * wall / n_steps:.1f} ms/step, "
+                          f"busy {busy_ms} ms/conversion, "
+                          f"util {util[backend, k]:.2f}, {cores} cores",
+            })
+    kmax = max(ks)
+    if "process" in backends:
+        rows.append({
+            "bench": "farm_scaling",
+            "name": f"wallclock_flat_process_k{kmax}",
+            "value": step_s["process", kmax] / step_s["process", 1],
+            "detail": f"process step-time ratio k={kmax} vs k=1 — "
+                      "~1.0 when the farm is flat in k (target <= 1.25)",
+        })
+        rows.append({
+            "bench": "farm_scaling",
+            "name": f"pipeline_utilization_process_k{kmax}",
+            "value": util["process", kmax],
+            "detail": f"device-busy / (k x wall) at k={kmax}, "
+                      "double-buffered (target >= 0.8)",
+        })
+    if "thread" in backends and "process" in backends:
+        rows.append({
+            "bench": "farm_scaling",
+            "name": f"thread_over_process_k{kmax}",
+            "value": step_s["thread", kmax] / step_s["process", kmax],
+            "detail": f"GIL-bound thread farm serializes: ~{kmax}x the "
+                      "process step time at the same k",
+        })
+    return rows
+
+
 def run(seed: int = 0, smoke: bool = False):
     ks = (1, 2, 4) if smoke else KS
     rounds = 24 if smoke else 192
@@ -149,4 +239,24 @@ def run(seed: int = 0, smoke: bool = False):
     rows = _variance_rows(ks, rounds, seed)
     rows += _convergence_rows(ks, steps, seed, 1 if smoke else N_SEEDS)
     rows += _latency_rows(ks)
+    rows += _throughput_rows(ks, smoke)
     return rows
+
+
+if __name__ == "__main__":
+    # standalone backend sweep: the bench-smoke CI hook runs one backend
+    # at a time (thread AND process) so a regression names its backend
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=list(THROUGHPUT_BACKENDS),
+                    action="append",
+                    help="backend(s) to sweep (default: all)")
+    ap.add_argument("--smoke", action="store_true")
+    cli = ap.parse_args()
+    backends = tuple(cli.backend) if cli.backend else THROUGHPUT_BACKENDS
+    out = _throughput_rows((1, 2, 4) if cli.smoke else KS, cli.smoke,
+                           backends)
+    for row in out:
+        print(f"{row['bench']},{row['name']},{row['value']:.6g},"
+              f"\"{row['detail']}\"")

@@ -42,6 +42,10 @@ run python -m benchmarks.run --list
 run python -m benchmarks.run --only fused_probe --seed 0 --out "$OUT"
 # chip farm: host-thread probe fan-out exercised on every PR
 run python -m benchmarks.run --only farm_scaling --smoke --seed 0 --out "$OUT"
+# farm backends: each backend's GIL-bound throughput sweep runs on its
+# own, so a broken backend names itself in the failing command
+run python -m benchmarks.farm_scaling --backend thread --smoke
+run python -m benchmarks.farm_scaling --backend process --smoke
 # drift/aging: MGD re-trim vs scheduled recal vs no mitigation
 run python -m benchmarks.run --only drift_aging --smoke --seed 0 --out "$OUT"
 # fault tolerance: hangs/crashes/garbage masked, retried, quarantined

@@ -172,8 +172,14 @@ def build_probe_parallel_external_step(
     but the k central-difference probes fan out to k EXTERNAL chips over
     the host boundary (``hardware.farm.ChipFarm``: one ordered
     ``io_callback`` per step gathers all 2k scalars, the chips evaluate
-    concurrently on a thread pool) instead of k shard_map mesh slices —
-    the paper §6 "farm of imperfect chips" picture.  All k sign-trees
+    concurrently on the farm's execution backend — per-chip runner
+    threads, worker processes, or a cluster transport; see
+    ``hardware/backend/``) instead of k shard_map mesh slices — the
+    paper §6 "farm of imperfect chips" picture.  This builder is
+    backend-agnostic BY CONSTRUCTION: it sees only
+    ``farm.read_cost_pairs`` / ``farm.write_params``, and device noise
+    is counter-keyed, so serial, thread and process farms (pipelined or
+    not) walk the bit-identical trajectory.  All k sign-trees
     are then regenerated locally (counter hash) and the update applied
     with the identical float association as the mesh driver, so a farm
     of k ideal chips and a k-pod mesh walk the same trajectory.

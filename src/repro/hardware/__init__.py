@@ -20,7 +20,17 @@ including the drifting chip variant for the external boundary).
 crashes, NaNs, outliers) over any device, and ``FaultPolicy`` arms
 ``ExternalPlant``/``ChipFarm`` with timeouts, retries, per-chip
 masking, quarantine and robust aggregation.
+
+``backend/`` is the farm's execution layer: ``ChipFarm(backend=...)``
+picks WHO runs the device transactions — ``serial`` (inline parity
+oracle), ``thread`` (one runner thread per chip, default), ``process``
+(one worker process per chip, built from picklable ``DeviceSpec``s —
+GIL-bound devices scale, hung workers are killed for real) or
+``cluster`` (the wire-protocol stub for farm-over-network chips).
 """
+from .backend import (BACKENDS, ClusterStubBackend, DeviceSpec,
+                      FarmBackend, ProcessBackend, SerialBackend,
+                      ThreadBackend, loopback_transport, make_backend)
 from .base import IdealPlant, Plant, PlantMeta
 from .devices import (DriftingAnalogChip, SimulatedAnalogChip,
                       mlp_device_fns, noisy_mlp_plant, quantized_mlp_plant)
@@ -40,4 +50,7 @@ __all__ = [
     "ChipFaultError", "ChipHealth", "DEFAULT_TIMEOUT_S", "FarmHealth",
     "FaultEvent", "FaultLog", "FaultPolicy", "FaultSpec", "FaultyChip",
     "InjectedFault",
+    "BACKENDS", "ClusterStubBackend", "DeviceSpec", "FarmBackend",
+    "ProcessBackend", "SerialBackend", "ThreadBackend",
+    "loopback_transport", "make_backend",
 ]

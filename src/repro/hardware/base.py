@@ -72,15 +72,33 @@ class PlantMeta:
     fault_tolerant: bool = False
 
     def step_latency_s(self, reads_per_step: int = 2,
-                       writes_per_step: int = 1) -> float:
+                       writes_per_step: int = 1, *,
+                       differential: bool = False,
+                       pipelined: bool = False) -> float:
         """Projected seconds per MGD iteration on this device (Table 3
         style: reads dominate; one amortized persistent write per τ_θ).
         ``reads_per_step``/``writes_per_step`` count PER-CHIP operations:
         a k-chip farm issues its k probe pairs concurrently, so the
         wall-clock per step is one chip's latency while the C̃-estimator
-        variance drops ∝ 1/k (benchmarks/farm_scaling.py)."""
-        return (reads_per_step * self.read_latency_s
-                + writes_per_step * self.write_latency_s)
+        variance drops ∝ 1/k (benchmarks/farm_scaling.py).
+
+        ``differential=True`` prices a differential probe line
+        (``measure_pair``): the antithetic pair C(θ+θ̃), C(θ−θ̃) resolves
+        in ONE readout conversion — the ±θ̃ branches settle concurrently
+        and the ADC digitizes their difference — so the pair costs one
+        ``read_latency_s`` instead of two.
+
+        ``pipelined=True`` prices the double-buffered farm schedule
+        (``ChipFarm(pipeline=True)``): step N+1's parameter write
+        overlaps step N's readout, so a step pays
+        ``max(read_time, write_time)`` instead of their sum — the device
+        is never idle waiting on the other phase."""
+        reads = reads_per_step * (0.5 if differential else 1.0)
+        read_time = reads * self.read_latency_s
+        write_time = writes_per_step * self.write_latency_s
+        if pipelined:
+            return max(read_time, write_time)
+        return read_time + write_time
 
 
 class Plant:

@@ -9,6 +9,8 @@ part of the *device*, not of the training state).
 """
 from __future__ import annotations
 
+import ctypes
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -78,6 +80,35 @@ def quantized_mlp_plant(sizes: Sequence[int], *, bits: int = 8,
                        adc_bits=adc_bits, sigma_a=sigma_a))
 
 
+# GIL-bound instrument-driver model for SimulatedAnalogChip(py_busy_ms=…).
+# Real lab stacks spend their readout time in pure-Python driver code and
+# in C calls that do NOT release the GIL (ctypes.PyDLL is exactly that
+# calling convention) — k such chips on a thread pool serialize to k×
+# single-chip wall-clock, which is the failure mode the process farm
+# backend exists to remove.  The busy loop below holds the GIL for a
+# FIXED amount of held-GIL work (not a wall-clock deadline — a deadline
+# would silently shrink under contention), chunked through a
+# non-GIL-releasing 200 µs libc usleep so a single chip does not peg the
+# CPU; without libc (non-POSIX) it degrades to a pure spin.
+try:
+    _LIBC = ctypes.PyDLL(None)
+    _LIBC.usleep.argtypes = [ctypes.c_uint]
+    _LIBC.usleep.restype = ctypes.c_int
+except (OSError, AttributeError):       # pragma: no cover - non-POSIX
+    _LIBC = None
+
+
+def _hold_gil_busy(ms: float) -> None:
+    """Hold the GIL for ≈``ms`` milliseconds of driver 'work'."""
+    if _LIBC is not None:
+        for _ in range(max(1, int(ms * 5))):
+            _LIBC.usleep(200)           # PyDLL: the GIL stays held
+        return
+    deadline = time.perf_counter() + ms * 1e-3  # pragma: no cover
+    while time.perf_counter() < deadline:       # pragma: no cover
+        pass
+
+
 class SimulatedAnalogChip:
     """Reference host device for ``ExternalPlant``: a sigmoidal network
     with fabrication defects, noisy analog writes and noisy readout.
@@ -99,11 +130,18 @@ class SimulatedAnalogChip:
     transiently at the parameter (paper's dedicated-perturbation-line /
     LFSR-per-synapse picture), so a central pair costs ONE persistent
     base-θ write instead of two full perturbed-tree writes.
+
+    ``py_busy_ms`` models a GIL-BOUND instrument driver: every readout
+    conversion holds the GIL for that many milliseconds of pure-Python
+    driver work (``_hold_gil_busy``), so k such chips on the farm's
+    thread backend serialize to k× single-chip wall-clock while the
+    process backend stays flat — the honest demonstration device for
+    ``benchmarks/farm_scaling.py --backend``.
     """
 
     def __init__(self, sizes: Sequence[int] = (49, 4, 4), *, seed: int = 0,
                  sigma_a: float = 0.15, sigma_theta: float = 0.01,
-                 sigma_c: float = 1e-4):
+                 sigma_c: float = 1e-4, py_busy_ms: float = 0.0):
         rng = np.random.default_rng(seed)
         # per-neuron logistic defects, one tuple (α, β, a0, b0) per layer
         # (the numpy twin of core.noise.sample_defects — same model, the
@@ -118,6 +156,7 @@ class SimulatedAnalogChip:
         self._seed = int(seed)
         self._sigma_theta = sigma_theta
         self._sigma_c = sigma_c
+        self._py_busy_ms = float(py_busy_ms)
         self._params = None
         self._rng = np.random.default_rng(seed + 101)
         self.writes = 0
@@ -161,6 +200,10 @@ class SimulatedAnalogChip:
         return float(rng.standard_normal())
 
     def _cost(self, params, batch, step, tag):
+        if self._py_busy_ms:
+            # GIL-bound driver work per readout CONVERSION (a pair is
+            # two conversions) — see _hold_gil_busy above
+            _hold_gil_busy(self._py_busy_ms)
         err = self._forward(batch["x"], params) - np.asarray(
             batch["y"], np.float32)
         c = float(np.mean(err * err))
@@ -223,14 +266,16 @@ class DriftingAnalogChip(SimulatedAnalogChip):
 
     def __init__(self, sizes: Sequence[int] = (49, 4, 4), *, seed: int = 0,
                  sigma_a: float = 0.15, sigma_theta: float = 0.01,
-                 sigma_c: float = 1e-4, drift_mode: str = "walk",
+                 sigma_c: float = 1e-4, py_busy_ms: float = 0.0,
+                 drift_mode: str = "walk",
                  drift_rate: float = 0.0, drift_tau: float = 0.0,
                  rest: float = 0.0):
         if drift_mode not in ("walk", "decay"):
             raise ValueError(f"drift mode must be 'walk' or 'decay', "
                              f"got {drift_mode!r}")
         super().__init__(sizes, seed=seed, sigma_a=sigma_a,
-                         sigma_theta=sigma_theta, sigma_c=sigma_c)
+                         sigma_theta=sigma_theta, sigma_c=sigma_c,
+                         py_busy_ms=py_busy_ms)
         self._drift_mode = drift_mode
         self._drift_rate = float(drift_rate)
         self._drift_tau = float(drift_tau)

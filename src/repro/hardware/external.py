@@ -167,6 +167,18 @@ class ExternalPlant(Plant):
         n = len(self.fault_log)
         return {"events": n, "by_kind": self.fault_log.counts()} if n else {}
 
+    def close(self) -> None:
+        """Shut the attempt pool down now.  Idempotent (also runs at GC);
+        a no-op for policy-free plants, which own no threads."""
+        if self._attempt_pool is not None:
+            self._finalizer()
+
+    def __enter__(self) -> "ExternalPlant":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     def _set_params(self, params, step):
         """One persistent device write, timestamped for step-capable
         (drifting) devices."""

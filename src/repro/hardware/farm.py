@@ -14,14 +14,37 @@ instrument* boundary the optimizer cannot trace into:
 
 * ``read_cost_pairs(params, thetas, batch, step)`` lowers to ONE ordered
   ``io_callback`` per step that fans the k central-difference pairs out
-  to the k devices on a thread pool and gathers all 2k cost scalars plus
-  a per-chip validity mask — the only values that ever cross back.
+  to the k devices and gathers all 2k cost scalars plus a per-chip
+  validity mask — the only values that ever cross back.
 * Each chip sees the optimizer's (step, tag=2k/2k+1) counters when its
   readout accepts them, so counter-keyed device noise distinguishes
   every read and two identically-seeded runs are bit-identical.
 * Devices with a differential probe line (``measure_pair``) pay one
   persistent base-θ write per pair; plain 2-method devices fall back to
   two perturbed-tree writes (see ``external.py``).
+
+**Execution backends** (``backend="thread" | "process" | "serial" |
+"cluster"`` or a ``FarmBackend`` instance — see ``hardware/backend/``):
+the farm owns only the MGD math and this host-boundary contract; WHERE a
+chip's transactions run is the backend's job.  ``thread`` (default)
+keeps live device instances in-process, one runner thread per chip;
+``process`` runs one worker process per chip built from picklable
+``DeviceSpec`` entries — GIL-bound instrument drivers scale to k and a
+hung worker is actually KILLED rather than abandoned; ``serial`` is the
+inline parity oracle; ``cluster`` is the wire-protocol stub.  Backends
+only move execution: device noise is counter-keyed, so every backend
+produces the bit-identical cost stream.
+
+**Double-buffered pipeline** (``pipeline=True``): ``write_params``
+enqueues the k per-chip writes and returns without waiting, so step
+N+1's writes overlap step N's traced compute, and the next probe round
+submits its pairs BEHIND the writes (per-chip FIFO — the device is
+always written-then-probed in program order) before resolving either.
+The schedule cannot perturb values — readout noise is (seed, step,
+tag)-keyed — but state-dependent boundaries must not run with writes in
+flight: ``fence()`` drains them, and the farm self-fences before
+``measure_accuracy`` / ``total_writes``; ``train_mgd`` fences before
+checkpoints, evals and recalibration so resume stays bit-exact.
 
 **Fault tolerance** (``fault_policy=hardware.FaultPolicy(...)``): real
 instruments hang, crash and return garbage, and k chips multiply that
@@ -36,7 +59,12 @@ consecutive exhausted rounds) are quarantined — skipped with NO I/O on
 the probe path, still receiving parameter writes — and re-probed every
 ``reprobe_every`` steps for readmission; a readmitted chip's
 counter-keyed noise stream is untouched (noise is a function of
-(step, tag), not of how many reads happened in between).
+(step, tag), not of how many reads happened in between).  A timed-out
+attempt ABANDONS the chip's worker through the backend: the thread
+backend parks the zombie and replaces the runner, the process backend
+kills the worker process and respawns it from the spec.  Health,
+quarantine and the ``FaultLog`` all live HOST-side; process workers
+ship their injected-fault events back with each reply.
 
 **Mask semantics / η-rescaling rule** (``core.probe_parallel``): the
 traced step zeroes invalid chips' C̃_k and keeps the per-chip coefficient
@@ -55,26 +83,27 @@ an un-interruptible deadlock inside an ordered callback.
 
 Everything host-side is NUMPY-PURE (JAX ops inside a host callback can
 deadlock the CPU client — see ``external.py``); each chip's noise is its
-own per-device stream, so the thread-pool schedule cannot perturb the
+own per-device stream, so the backend schedule cannot perturb the
 trajectory.
 """
 from __future__ import annotations
 
+import time
 import weakref
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import DeviceSpec, FarmBackend, make_backend
 from .base import Plant, PlantMeta
 from .devices import DriftingAnalogChip, SimulatedAnalogChip
-from .external import (_io_callback, accepts_counters, accepts_step,
-                       check_device)
+from .external import _io_callback, check_device
 from .faults import (DEFAULT_TIMEOUT_S, ChipFaultError, FarmHealth,
-                     FaultLog, FaultPolicy, FaultSpec, FaultyChip,
-                     guarded_call)
+                     FaultLog, FaultPolicy, FaultSpec, FaultyChip)
 
 #: Fixed-shape placeholder for a masked-out chip's cost pair — NaN, so a
 #: bug that consumes an invalid pair without checking the mask poisons
@@ -82,11 +111,15 @@ from .faults import (DEFAULT_TIMEOUT_S, ChipFaultError, FarmHealth,
 _INVALID_PAIR = np.array([np.nan, np.nan], np.float32)
 
 
-def _np_axpy(sign, theta, params):
-    """params + sign·theta, host-side numpy (never dispatches JAX ops)."""
-    return jax.tree_util.tree_map(
-        lambda w, t: np.asarray(w, np.float32)
-        + np.float32(sign) * np.asarray(t, np.float32), params, theta)
+def _teardown(backend: FarmBackend,
+              supervisors: Optional[ThreadPoolExecutor]) -> None:
+    """Farm teardown (close() and the GC finalizer): backend workers
+    first, then the supervisor pool — sweeps build many farms per
+    process and leaked threads/processes would otherwise accumulate
+    until interpreter exit."""
+    backend.shutdown(wait=False)
+    if supervisors is not None:
+        supervisors.shutdown(wait=False)
 
 
 class ChipFarm(Plant):
@@ -96,23 +129,36 @@ class ChipFarm(Plant):
     plant=farm)`` — the farm has no single-scalar ``read_cost`` (wrap one
     device in ``ExternalPlant`` for the single-chip drivers).
 
-    ``fault_policy`` arms the host boundary: per-attempt timeouts,
-    retries with exponential backoff, per-chip masking on exhaustion,
-    quarantine/readmission via the ``health`` registry, and the robust
-    aggregation mode ``core.probe_parallel`` reads at build time.  See
-    the module docstring for the mask semantics and η-rescaling rule.
+    ``devices`` entries are live device instances (thread/serial
+    backends) or picklable ``DeviceSpec``s (required by the process and
+    cluster backends, accepted by all).  ``backend`` picks who executes
+    the transactions; ``pipeline=True`` double-buffers parameter writes
+    against the next probe round.  ``fault_policy`` arms the host
+    boundary: per-attempt timeouts, retries with exponential backoff,
+    per-chip masking on exhaustion, quarantine/readmission via the
+    ``health`` registry, and the robust aggregation mode
+    ``core.probe_parallel`` reads at build time.  See the module
+    docstring for the mask semantics and η-rescaling rule.
+
+    The farm is a context manager; ``close()`` is idempotent and also
+    runs at garbage collection.  ``max_workers`` is accepted for
+    backward compatibility and ignored — execution is one worker per
+    chip under every backend.
     """
 
     def __init__(self, devices: Sequence[Any], *,
                  meta: Optional[PlantMeta] = None,
                  max_workers: Optional[int] = None,
                  fault_policy: Optional[FaultPolicy] = None,
-                 fault_log: Optional[FaultLog] = None):
-        devices = list(devices)
-        if not devices:
+                 fault_log: Optional[FaultLog] = None,
+                 backend="thread", pipeline: bool = False):
+        del max_workers                 # legacy knob: one worker per chip
+        entries = list(devices)
+        if not entries:
             raise ValueError("ChipFarm needs at least one device")
-        for device in devices:
-            check_device(device)
+        for entry in entries:
+            if not isinstance(entry, DeviceSpec):
+                check_device(entry)
         if _io_callback is None:        # pragma: no cover - old jax
             raise RuntimeError("ChipFarm needs jax.experimental."
                                "io_callback (jax >= 0.4.9)")
@@ -120,55 +166,54 @@ class ChipFarm(Plant):
                                                        FaultPolicy):
             raise TypeError(f"fault_policy must be a hardware.FaultPolicy, "
                             f"got {type(fault_policy).__name__}")
-        self.devices = devices
+        self.devices = entries
         self.policy = fault_policy
         self.fault_log = fault_log if fault_log is not None else FaultLog()
-        self._names = [getattr(d, "name", None) or type(d).__name__
-                       for d in devices]
+        self.pipeline = bool(pipeline)
+        self.backend = make_backend(backend)
+        self._caps = self.backend.start(entries, fault_log=self.fault_log)
+        self._names = [c["name"] for c in self._caps]
         self.health = FarmHealth(self._names)
-        # capability inspection once per device, never on the hot loop
-        self._caps = []
-        for device in devices:
-            pair = getattr(device, "measure_pair", None)
-            pair = pair if callable(pair) else None
-            acc = getattr(device, "measure_accuracy", None)
-            acc = acc if callable(acc) else None
-            self._caps.append({
-                "counters": accepts_counters(device.measure_cost),
-                "pair": pair,
-                "pair_counters": pair is not None and accepts_counters(pair),
-                "write_step": accepts_step(device.set_params),
-                "acc": acc,
-                "acc_step": acc is not None and accepts_step(acc),
-            })
-        self._pool = ThreadPoolExecutor(
-            max_workers=max_workers or len(devices),
-            thread_name_prefix="chip-farm")
-        # reclaim the worker threads when the farm is garbage-collected —
-        # sweeps build many farms per process and idle non-daemon threads
-        # would otherwise accumulate until interpreter exit
-        self._finalizer = weakref.finalize(self, self._pool.shutdown,
-                                           wait=False)
-        self._attempt_pool = None
+        self._pending_writes: list = []   # [(chip, step, Task)]
+        self._t_start: Optional[float] = None
+        self._supervisors = None
         if fault_policy is not None:
-            # two-level pools: supervisors block on attempt futures, and a
-            # hung attempt holds its worker until the instrument releases
-            # it — spare attempt threads keep retries and later steps from
-            # starving behind a zombie
-            self._attempt_pool = ThreadPoolExecutor(
-                max_workers=len(devices) * (fault_policy.retries + 2),
-                thread_name_prefix="chip-farm-attempt")
-            self._attempt_finalizer = weakref.finalize(
-                self, self._attempt_pool.shutdown, wait=False)
-        self.meta = meta or PlantMeta(name=f"chip-farm-{len(devices)}",
-                                      external=True, chips=len(devices),
+            # one supervisor thread per chip runs the retry loop, so
+            # per-chip timeouts/backoffs never serialize across chips
+            self._supervisors = ThreadPoolExecutor(
+                max_workers=len(entries),
+                thread_name_prefix="chip-farm-sup")
+        # reclaim workers when the farm is garbage-collected; close()
+        # invokes the same finalizer, making it idempotent
+        self._finalizer = weakref.finalize(
+            self, _teardown, self.backend, self._supervisors)
+        self.meta = meta or PlantMeta(name=f"chip-farm-{len(entries)}",
+                                      external=True, chips=len(entries),
                                       fault_tolerant=fault_policy is not None)
 
+    # -- lifecycle -----------------------------------------------------------
+
     def close(self) -> None:
-        """Shut the thread pools down now (also runs at GC)."""
+        """Tear down backend workers and supervisor threads.  Idempotent
+        (also runs at GC).  In-flight pipelined writes are drained
+        best-effort first — call ``fence()`` yourself when you need the
+        commit guaranteed (or an error surfaced)."""
+        if self._pending_writes:
+            try:
+                self.fence(timeout=5.0)
+            except Exception:           # noqa: BLE001 — teardown path
+                self._pending_writes = []
         self._finalizer()
-        if self._attempt_pool is not None:
-            self._attempt_finalizer()
+
+    def __enter__(self) -> "ChipFarm":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    @property
+    def closed(self) -> bool:
+        return not self._finalizer.alive
 
     @property
     def n_chips(self) -> int:
@@ -185,34 +230,91 @@ class ChipFarm(Plant):
                 "by_kind": self.fault_log.counts(),
                 **self.health.summary()}
 
-    # -- host side (numpy-pure, runs on the callback + pool threads) --------
+    def pipeline_stats(self) -> dict:
+        """Utilization telemetry: ``utilization`` is Σ per-chip device
+        busy seconds / (k × wall seconds since the first probe round) —
+        1.0 means every chip was converting for the whole run, the
+        ≥0.8 target of the double-buffered pipeline."""
+        busy = self.backend.busy_seconds()
+        wall = (0.0 if self._t_start is None
+                else time.perf_counter() - self._t_start)
+        return {
+            "backend": type(self.backend).__name__,
+            "pipeline": self.pipeline,
+            "chips": self.n_chips,
+            "busy_s": busy,
+            "wall_s": wall,
+            "utilization": (busy / (wall * self.n_chips)) if wall else 0.0,
+        }
 
-    def _set_params(self, i, params, step=None):
-        """One chip's persistent write, timestamped for step-capable
-        (drifting) devices."""
-        if step is not None and self._caps[i]["write_step"]:
-            self.devices[i].set_params(params, step=int(step))
-        else:
-            self.devices[i].set_params(params)
+    # -- host side (numpy-pure, runs on the callback + supervisor threads) ---
 
-    def _chip_pair(self, i, params, theta, batch, step):
-        """One chip's central pair → (C₊, C₋).  Tags (2i, 2i+1) mirror the
-        mesh driver's per-pod tag layout."""
-        device, caps = self.devices[i], self._caps[i]
-        tag = 2 * i
-        if caps["pair"] is not None:
-            self._set_params(i, params, step)  # ONE base-θ write per pair
-            if caps["pair_counters"]:
-                return caps["pair"](theta, batch, step=step, tag=tag)
-            return caps["pair"](theta, batch)
-        # plain 2-method device: two perturbed writes + two reads
-        def read(perturbed, t):
-            self._set_params(i, perturbed, step)
-            if caps["counters"]:
-                return device.measure_cost(batch, step=step, tag=t)
-            return device.measure_cost(batch)
-        return (read(_np_axpy(1.0, theta, params), tag),
-                read(_np_axpy(-1.0, theta, params), tag + 1))
+    def fence(self, timeout: Optional[float] = None) -> None:
+        """Drain in-flight pipelined parameter writes.  Write errors
+        surface here with the failing chip named (or are logged and
+        masked under a fault policy) — the explicit synchronization
+        point before checkpoints, evals and recalibration."""
+        pending, self._pending_writes = self._pending_writes, []
+        self._resolve_writes(pending, timeout=timeout)
+
+    def _resolve_writes(self, pending, timeout: Optional[float] = None):
+        deadline = timeout if timeout is not None else DEFAULT_TIMEOUT_S
+        for i, step, task in pending:
+            try:
+                task.result(timeout=deadline)
+            except Exception as e:      # noqa: BLE001 — device failure
+                if self.policy is None:
+                    raise ChipFaultError(
+                        f"{self._label(i)}: parameter write failed at "
+                        f"step={step}: {e!r}") from e
+                # under a policy a failed write must not unwind the step;
+                # the chip keeps its stale parameters and the next probe
+                # round surfaces (and masks) the damage
+                self.fault_log.record("write-error", self._label(i),
+                                      step=step, detail=str(e))
+
+    def _guarded_submit(self, i, op, payload, *, step, tag, health):
+        """One chip transaction under the fault policy: submit to the
+        backend, bound each attempt by ``timeout_s``, ABANDON the
+        chip's worker on timeout (thread: replace runner; process: kill
+        + respawn), retry with exponential backoff, reject non-finite
+        readouts.  Returns ``(value, latency_s, None)`` or ``(None,
+        None, last_error)`` — the backend-native twin of
+        ``faults.guarded_call``."""
+        policy, label = self.policy, self._label(i)
+        last: Optional[Exception] = None
+        for attempt in range(policy.retries + 1):
+            if attempt:
+                time.sleep(policy.backoff_for(attempt))
+            task = self.backend.submit(i, op, payload)
+            t0 = time.monotonic()
+            try:
+                out = task.result(timeout=policy.timeout_s)
+            except _FuturesTimeout:
+                self.backend.abandon(i)
+                last = ChipFaultError(
+                    f"{label}: no response within timeout_s="
+                    f"{policy.timeout_s}s at step={step} "
+                    f"(attempt {attempt})")
+                kind = "timeout"
+            except Exception as e:      # noqa: BLE001 — any device failure
+                last, kind = e, "error"
+            else:
+                if policy.reject_nonfinite and not np.all(
+                        np.isfinite(np.asarray(out, np.float64))):
+                    last = ChipFaultError(
+                        f"{label}: non-finite readout {out!r} at "
+                        f"step={step}")
+                    kind = "nonfinite"
+                else:
+                    return out, time.monotonic() - t0, None
+            if health is not None:
+                health.attempts_failed += 1
+                if kind == "timeout":
+                    health.timeouts += 1
+            self.fault_log.record(kind, label, step=step, tag=tag,
+                                  attempt=attempt, detail=str(last))
+        return None, None, last
 
     def _chip_pair_robust(self, i, params, theta, batch, step):
         """One chip's probe round under the fault policy (supervisor
@@ -223,11 +325,9 @@ class ChipFarm(Plant):
         if h.skip(step):
             # quarantined, not yet due a readmission probe: NO I/O
             return _INVALID_PAIR, False
-        out, latency, err = guarded_call(
-            self._attempt_pool, self._chip_pair,
-            (i, params, theta, batch, step),
-            policy=policy, label=self._label(i), log=self.fault_log,
-            health=h, step=step, tag=2 * i)
+        out, latency, err = self._guarded_submit(
+            i, "pair", (params, theta, batch, step, 2 * i),
+            step=step, tag=2 * i, health=h)
         if err is None:
             if h.quarantined:
                 h.readmit()
@@ -249,17 +349,27 @@ class ChipFarm(Plant):
     def _host_pairs(self, params, thetas, batch, step):
         step = int(step)
         k = self.n_chips
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        # pipelined writes from the previous step sit AHEAD of the pair
+        # ops below in each chip's FIFO: dispatch the pairs first (the
+        # workers run write→pair back to back), then resolve the write
+        # tasks — by then effectively free — so write errors still
+        # surface before this round's costs are consumed.
+        pending, self._pending_writes = self._pending_writes, []
         if self.policy is None:
-            futures = [
-                self._pool.submit(self._chip_pair, i, params, thetas[i],
-                                  batch, step)
+            tasks = [
+                self.backend.submit(i, "pair",
+                                    (params, thetas[i], batch, step, 2 * i))
                 for i in range(k)
             ]
+            self._resolve_writes(pending)
             pairs = []
             # gather in chip order — the schedule cannot reorder results
-            for i, f in enumerate(futures):
+            for i, t in enumerate(tasks):
                 try:
-                    pairs.append(f.result(timeout=DEFAULT_TIMEOUT_S))
+                    pairs.append(np.asarray(t.result(
+                        timeout=DEFAULT_TIMEOUT_S), np.float32))
                 except Exception as e:
                     raise ChipFaultError(
                         f"{self._label(i)}: probe failed at step={step}: "
@@ -268,10 +378,11 @@ class ChipFarm(Plant):
                     ) from e
             return np.asarray(pairs, np.float32), np.ones(k, bool)
         futures = [
-            self._pool.submit(self._chip_pair_robust, i, params, thetas[i],
-                              batch, step)
+            self._supervisors.submit(self._chip_pair_robust, i, params,
+                                     thetas[i], batch, step)
             for i in range(k)
         ]
+        self._resolve_writes(pending)
         deadline = self.policy.round_deadline_s()
         costs = np.empty((k, 2), np.float32)
         valid = np.zeros(k, bool)
@@ -288,21 +399,16 @@ class ChipFarm(Plant):
 
     def _host_write(self, params, step):
         step = int(step)
-        futures = [self._pool.submit(self._set_params, i, params, step)
-                   for i in range(self.n_chips)]
-        for i, f in enumerate(futures):
-            try:
-                f.result(timeout=DEFAULT_TIMEOUT_S)
-            except Exception as e:
-                if self.policy is None:
-                    raise ChipFaultError(
-                        f"{self._label(i)}: parameter write failed at "
-                        f"step={step}: {e!r}") from e
-                # under a policy a failed write must not unwind the step;
-                # the chip keeps its stale parameters and the next probe
-                # round surfaces (and masks) the damage
-                self.fault_log.record("write-error", self._label(i),
-                                      step=step, detail=str(e))
+        tasks = [(i, step, self.backend.submit(i, "write", (params, step)))
+                 for i in range(self.n_chips)]
+        if self.pipeline:
+            # double-buffer: the writes execute while the host runs the
+            # traced compute toward the next probe round; per-chip FIFO
+            # guarantees they land before that round's pair ops, and
+            # errors surface at the next gather (or fence())
+            self._pending_writes.extend(tasks)
+            return np.int32(0)
+        self._resolve_writes(tasks)
         return np.int32(0)
 
     # -- traced side ---------------------------------------------------------
@@ -333,7 +439,8 @@ class ChipFarm(Plant):
         """Commit the post-update parameters to EVERY chip (open-loop, as
         in ``ExternalPlant``: per-chip write noise stays invisible).
         Quarantined chips are still written — writes are cheap and keep
-        them current for readmission."""
+        them current for readmission.  With ``pipeline=True`` the host
+        does not wait for the writes to land (see ``fence``)."""
         _io_callback(self._host_write, jax.ShapeDtypeStruct((), jnp.int32),
                      params, jnp.asarray(step, jnp.int32), ordered=True)
         return params
@@ -344,24 +451,18 @@ class ChipFarm(Plant):
         """Mean on-chip accuracy across the farm after committing
         ``params`` — the experimenter's bench readout, not training I/O.
 
-        Writes route through ``_set_params`` with ``step`` forwarded, so
-        eval-time writes to step-capable drifting chips are timestamped
-        (a bench readout of an aging chip must not silently reset its
-        age).  Under a fault policy, quarantined chips are excluded from
-        the bench average and per-chip errors are logged and skipped
-        (falling back to all chips if every one is quarantined)."""
+        Self-fences first (a bench readout must not race an in-flight
+        pipelined write).  Writes are timestamped with ``step`` for
+        step-capable drifting chips (a bench readout of an aging chip
+        must not silently reset its age).  Under a fault policy,
+        quarantined chips are excluded from the bench average and
+        per-chip errors are logged and skipped (falling back to all
+        chips if every one is quarantined)."""
         params = jax.tree_util.tree_map(
             lambda x: np.asarray(x, np.float32), params)
-
-        def one(i):
-            self._set_params(i, params, step)
-            if self._caps[i]["acc_step"]:
-                return self._caps[i]["acc"](
-                    batch, step=None if step is None else int(step))
-            return self._caps[i]["acc"](batch)
-
+        self.fence()
         capable = [i for i in range(self.n_chips)
-                   if self._caps[i]["acc"] is not None]
+                   if self._caps[i]["accuracy"]]
         if not capable:
             raise NotImplementedError("no device exposes measure_accuracy")
         indices = capable
@@ -369,11 +470,13 @@ class ChipFarm(Plant):
             live = [i for i in capable
                     if not self.health.chips[i].quarantined]
             indices = live or capable
-        futures = {i: self._pool.submit(one, i) for i in indices}
+        tasks = {i: self.backend.submit(i, "accuracy",
+                                        (params, batch, step))
+                 for i in indices}
         values = []
-        for i, f in futures.items():
+        for i, t in tasks.items():
             try:
-                values.append(f.result(timeout=DEFAULT_TIMEOUT_S))
+                values.append(t.result(timeout=DEFAULT_TIMEOUT_S))
             except Exception as e:
                 if self.policy is None:
                     raise ChipFaultError(
@@ -389,23 +492,39 @@ class ChipFarm(Plant):
 
     @property
     def total_writes(self) -> int:
-        """Summed ``writes`` counters of counting devices (test/telemetry)."""
-        return sum(int(getattr(d, "writes", 0)) for d in self.devices)
+        """Summed ``writes`` counters across the farm (test/telemetry) —
+        routed through the backend, so process-backend chips report
+        their in-worker counters.  Self-fences first."""
+        self.fence()
+        tasks = [self.backend.submit(i, "writes", ())
+                 for i in range(self.n_chips)]
+        return sum(int(t.result(timeout=DEFAULT_TIMEOUT_S))
+                   for t in tasks)
 
 
 def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
                         base_seed: int = 0, sigma_a: float = 0.15,
                         sigma_theta: float = 0.01, sigma_c: float = 1e-4,
+                        py_busy_ms: float = 0.0,
                         drift_rate: float = 0.0,
                         drift_rates: Optional[Sequence[float]] = None,
                         drift_mode: str = "walk", drift_tau: float = 0.0,
                         max_workers: Optional[int] = None,
                         faults=None, fault_seed: int = 1000,
-                        fault_policy: Optional[FaultPolicy] = None
+                        fault_policy: Optional[FaultPolicy] = None,
+                        backend="thread", pipeline: bool = False
                         ) -> ChipFarm:
     """A farm of k ``SimulatedAnalogChip``s with DISTINCT device seeds —
     k different physical chips (different defect draws, different noise
     streams), the same instrument replicated k× on the bench.
+
+    ``backend`` picks the execution backend; spec-only backends
+    (``process``/``cluster``) get picklable ``DeviceSpec`` entries that
+    rebuild the identical chips — fault wrappers included — in their
+    workers, everything else gets live instances.  ``pipeline=True``
+    double-buffers parameter writes (see ``ChipFarm``).  ``py_busy_ms``
+    makes each chip hold the GIL during readout conversions — the
+    honest thread-vs-process scaling demonstration device.
 
     ``drift_rate`` (every chip) or ``drift_rates`` (one σ_d per chip — a
     HETEROGENEOUS farm, where chip i ages at its own rate) build
@@ -429,17 +548,7 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
         rates = [float(r) for r in drift_rates]
         if len(rates) != k:
             raise ValueError(f"{len(rates)} drift_rates for {k} chips")
-    devices = [
-        SimulatedAnalogChip(sizes, seed=base_seed + i, sigma_a=sigma_a,
-                            sigma_theta=sigma_theta, sigma_c=sigma_c)
-        if not (rates[i] or drift_tau) else
-        DriftingAnalogChip(sizes, seed=base_seed + i, sigma_a=sigma_a,
-                           sigma_theta=sigma_theta, sigma_c=sigma_c,
-                           drift_mode=drift_mode, drift_rate=rates[i],
-                           drift_tau=drift_tau)
-        for i in range(k)
-    ]
-    fault_log = FaultLog()
+    specs = [None] * k
     if faults is not None:
         specs = list(faults) if isinstance(faults, (list, tuple)) \
             else [faults] * k
@@ -449,15 +558,41 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
             if spec is not None and not isinstance(spec, FaultSpec):
                 raise TypeError(f"faults entries must be FaultSpec or "
                                 f"None, got {type(spec).__name__}")
-        devices = [
-            FaultyChip(d, spec, seed=fault_seed + i, log=fault_log)
-            if spec is not None else d
-            for i, (d, spec) in enumerate(zip(devices, specs))
-        ]
+
+    def chip_recipe(i):
+        """(cls, kwargs) for chip i — one place, so the instance and
+        DeviceSpec paths build the identical device."""
+        kwargs = dict(seed=base_seed + i, sigma_a=sigma_a,
+                      sigma_theta=sigma_theta, sigma_c=sigma_c,
+                      py_busy_ms=py_busy_ms)
+        if rates[i] or drift_tau:
+            kwargs.update(drift_mode=drift_mode, drift_rate=rates[i],
+                          drift_tau=drift_tau)
+            return DriftingAnalogChip, kwargs
+        return SimulatedAnalogChip, kwargs
+
+    be = make_backend(backend)
+    fault_log = FaultLog()
+    if be.accepts_instances:
+        devices = []
+        for i in range(k):
+            cls, kwargs = chip_recipe(i)
+            device = cls(sizes, **kwargs)
+            if specs[i] is not None:
+                device = FaultyChip(device, specs[i], seed=fault_seed + i,
+                                    log=fault_log)
+            devices.append(device)
+    else:
+        devices = []
+        for i in range(k):
+            cls, kwargs = chip_recipe(i)
+            devices.append(DeviceSpec(cls, (tuple(sizes),), kwargs,
+                                      fault=specs[i],
+                                      fault_seed=fault_seed + i))
     drifting = any(rates) or drift_tau
     return ChipFarm(
         devices, max_workers=max_workers, fault_policy=fault_policy,
-        fault_log=fault_log,
+        fault_log=fault_log, backend=be, pipeline=pipeline,
         meta=PlantMeta(name=f"sim-farm-{k}" + ("-drift" if drifting else ""),
                        cost_noise=sigma_c, write_noise=sigma_theta,
                        sigma_a=sigma_a, external=True, chips=k,

@@ -177,6 +177,19 @@ class FaultLog:
                 out[e.kind] = out.get(e.kind, 0) + 1
             return out
 
+    def drain(self) -> List[FaultEvent]:
+        """Return AND clear the recorded events — how a worker-local log
+        (process/cluster farm backends) ships its entries back to the
+        host with each reply, so the farm's log sees one merged stream."""
+        with self._lock:
+            events, self.events = self.events, []
+            return events
+
+    def extend(self, events) -> None:
+        """Fold events shipped from a worker-local log into this one."""
+        with self._lock:
+            self.events.extend(events)
+
 
 class FaultyChip:
     """Composable fault-injecting wrapper over any host device.

@@ -203,6 +203,17 @@ def train_mgd(
                 return p, s, jax.tree_util.tree_map(lambda x: x[-1], ms)
             return run
 
+    # double-buffered farms (ChipFarm(pipeline=True)) leave parameter
+    # writes in flight between steps; state-dependent boundaries —
+    # checkpoints, evals, recalibration — must not run with writes
+    # pending, so the loop fences the plant first.  A no-op for every
+    # other plant (and values are unaffected either way: device noise is
+    # counter-keyed, so the fence changes WHEN writes land, never what
+    # the chips read — resume stays bit-exact through a pipelined
+    # boundary).
+    plant_fence = getattr(drv.plant, "fence", None)
+    fence = plant_fence if callable(plant_fence) else (lambda: None)
+
     runners = {}
     history = []
     done = start_step
@@ -218,6 +229,7 @@ def train_mgd(
         done += n
         rec = {k: float(v) for k, v in metrics.items()}
         if eval_fn and eval_every and (done % eval_every < chunk):
+            fence()
             rec.update({k: float(v) for k, v in eval_fn(params).items()})
         history.append((done, rec))
         if log:
@@ -225,14 +237,17 @@ def train_mgd(
             log(f"[mgd] step {done}/{num_steps} {msg} "
                 f"({(time.time()-t0):.1f}s)")
         if recal_every and done % recal_every == 0 and done < num_steps:
+            fence()
             params = _recalibrate(drv, params, shadow, done)
             if log:
                 log(f"[mgd] step {done}: scheduled recalibration "
                     f"(full rewrite from shadow params)")
         if checkpoint_dir and checkpoint_every and done % checkpoint_every == 0:
+            fence()
             ckpt.save(checkpoint_dir, done, _ckpt_tree(params, state),
                       extra={"algo": drv.algorithm,
                              "seed": int(getattr(drv.config, "seed", 0))})
+    fence()
     # fault-tolerant plants (ExternalPlant/ChipFarm with a FaultPolicy)
     # expose a telemetry summary — surface it once so a run that survived
     # faults says so instead of looking clean

@@ -15,7 +15,7 @@ HARDWARE_DIR = (pathlib.Path(__file__).resolve().parent.parent
 
 def test_every_future_gather_in_hardware_has_a_timeout():
     offenders = []
-    for path in sorted(HARDWARE_DIR.glob("*.py")):
+    for path in sorted(HARDWARE_DIR.rglob("*.py")):
         src = path.read_text()
         for match in re.finditer(r"\.result\(([^)]*)\)", src):
             if "timeout" not in match.group(1):
@@ -32,3 +32,42 @@ def test_hardware_sources_exist():
     assert (HARDWARE_DIR / "farm.py").is_file()
     assert (HARDWARE_DIR / "external.py").is_file()
     assert (HARDWARE_DIR / "faults.py").is_file()
+    assert (HARDWARE_DIR / "backend" / "base.py").is_file()
+
+
+def test_every_backend_defines_shutdown():
+    """Every farm backend must own its teardown: sweeps build many farms
+    per process, and a backend without a shutdown path leaks its workers
+    (threads or processes) until interpreter exit."""
+    backend_dir = HARDWARE_DIR / "backend"
+    # subclassing a CONCRETE backend inherits its teardown; FarmBackend
+    # itself only raises NotImplementedError, so it does not count
+    inherits = re.compile(
+        r"class\s+\w+\((SerialBackend|ThreadBackend|ProcessBackend)\)")
+    for path in sorted(backend_dir.glob("*.py")):
+        if path.name == "__init__.py":
+            continue
+        src = path.read_text()
+        assert "def shutdown" in src or inherits.search(src), (
+            f"{path.name}: no shutdown() and no concrete-backend base — "
+            "every backend module needs a worker teardown path")
+
+
+def test_process_backend_actually_kills_workers():
+    """The process backend's whole point is REAL kills: hung workers are
+    terminated (not politely joined forever), joins are bounded, and
+    workers are daemonic so an unclean interpreter exit cannot hang on
+    them."""
+    src = (HARDWARE_DIR / "backend" / "process.py").read_text()
+    assert ".terminate()" in src, "no process terminate() — hangs survive"
+    assert re.search(r"\.join\(\s*(timeout\s*=)?\s*[\d.]", src), \
+        "unbounded process join — a hung worker would hang teardown"
+    assert "daemon=True" in src, "non-daemon workers outlive the host"
+
+
+def test_farm_close_tears_down_backend():
+    """ChipFarm.close() must route through the backend's shutdown (via
+    the GC finalizer) — a farm that only shuts its own pools leaks the
+    backend's workers."""
+    src = (HARDWARE_DIR / "farm.py").read_text()
+    assert "backend.shutdown" in src
