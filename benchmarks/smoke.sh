@@ -17,7 +17,7 @@
 # baseline is an explicit copy + git commit, not a smoke side effect.
 set -u
 cd "$(dirname "$0")/.."
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH="src:tools${PYTHONPATH:+:$PYTHONPATH}"
 OUT="${SMOKE_OUT:-artifacts/bench-fresh}"
 
 run() {
@@ -36,6 +36,9 @@ if [ "${1:-}" = "--self-test-fail" ]; then
     exit 0
 fi
 
+# invariant lint first: cheapest gate, catches host-boundary/determinism
+# violations before any benchmark spends minutes reproducing them
+run python -m mgdlint src tests benchmarks
 run python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
     tests/test_driver_api.py
 run python -m benchmarks.run --list

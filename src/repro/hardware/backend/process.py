@@ -142,7 +142,7 @@ class _ChipWorker:
 
     def _loop(self):
         while True:
-            item = self.queue.get()
+            item = self.queue.get()  # mgdlint: disable=MGD003 (idle FIFO wait; the _STOP sentinel always wakes it on shutdown)
             if item is _STOP:
                 self._teardown()
                 return

@@ -49,6 +49,28 @@ def _assert_trees_equal(a, b):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
+@pytest.fixture(autouse=True)
+def _close_plants(monkeypatch):
+    """Close every farm/plant a test builds.  These tests lean on GC
+    finalizers for teardown, but jitted steps pin their io_callback
+    closures (and so the farm) in jax's compilation cache — the
+    finalizer never runs and supervisor-pool threads outlive the test,
+    which the conftest leak sentinel now fails the suite for.  close()
+    is idempotent, so tests that already close explicitly are fine."""
+    created = []
+    for cls in (ChipFarm, ExternalPlant):
+        orig = cls.__init__
+
+        def tracked(self, *a, _orig=orig, **kw):
+            _orig(self, *a, **kw)
+            created.append(self)
+
+        monkeypatch.setattr(cls, "__init__", tracked)
+    yield
+    for plant in created:
+        plant.close()
+
+
 #: Fast-failing policy for tests — real backoffs would slow the suite.
 def _policy(**kw):
     base = dict(timeout_s=10.0, retries=2, backoff_s=0.001,

@@ -1,0 +1,436 @@
+"""mgdlint rule suite: every rule must fire on its bad fixture, pass
+its good fixture, be silenced by a reasoned waiver, and round-trip
+through the baseline.  Plus engine-level checks (waiver parsing,
+MGD000, alias resolution, CLI exit codes) and targeted cases for the
+trickier analyses (MGD001 reachability, MGD004 taint laundering).
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+mgdlint = pytest.importorskip(
+    "mgdlint", reason="tools/ not on sys.path (see tests/conftest.py)")
+from mgdlint import baseline as baseline_mod  # noqa: E402
+from mgdlint.cli import self_test  # noqa: E402
+from mgdlint.registry import RULES, all_rules, run_lint  # noqa: E402
+from mgdlint.walker import SourceFile  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ALL_CODES = sorted(RULES)
+
+
+def lint_snippet(tmp_path, rel, text, select=None):
+    target = tmp_path / rel
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(textwrap.dedent(text))
+    return run_lint([target], tmp_path, select=select)
+
+
+# ---------------------------------------------------------------------------
+# every rule: fixture pairs, waiver, baseline
+# ---------------------------------------------------------------------------
+
+
+def test_six_rules_registered():
+    assert ALL_CODES == ["MGD001", "MGD002", "MGD003",
+                         "MGD004", "MGD005", "MGD006"]
+    for rule in all_rules():
+        assert rule.fixture_path and rule.fixture_bad \
+            and rule.fixture_good, f"{rule.code}: missing fixtures"
+        assert rule.rationale, f"{rule.code}: missing rationale"
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_rule_fires_on_bad_fixture(tmp_path, code):
+    rule = RULES[code]()
+    res = lint_snippet(tmp_path, rule.fixture_path, rule.fixture_bad,
+                       select=[code])
+    assert any(f.code == code for f in res.findings), \
+        f"{code} did not fire on its bad fixture"
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_rule_passes_good_fixture(tmp_path, code):
+    rule = RULES[code]()
+    res = lint_snippet(tmp_path, rule.fixture_path, rule.fixture_good,
+                       select=[code])
+    assert not res.findings, [f.format() for f in res.findings]
+    assert not res.parse_errors
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_rule_out_of_scope_path_is_ignored(tmp_path, code):
+    rule = RULES[code]()
+    res = lint_snippet(tmp_path, "scripts/elsewhere.py",
+                       rule.fixture_bad, select=[code])
+    assert not res.findings, \
+        f"{code} fired outside its path scope"
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_waiver_suppresses_rule(tmp_path, code):
+    rule = RULES[code]()
+    res = lint_snippet(tmp_path, rule.fixture_path, rule.fixture_bad,
+                       select=[code])
+    lines = textwrap.dedent(rule.fixture_bad).splitlines()
+    for idx in sorted({f.line - 1 for f in res.findings}):
+        lines[idx] += (f"  # mgdlint: disable={code} "
+                       f"(fixture waiver for the test suite)")
+    res2 = lint_snippet(tmp_path, rule.fixture_path,
+                        "\n".join(lines) + "\n", select=[code])
+    assert not res2.findings, [f.format() for f in res2.findings]
+    assert res2.waived, f"{code}: waiver not recorded as waived"
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_baseline_roundtrip_grandfathers(tmp_path, code):
+    rule = RULES[code]()
+    res = lint_snippet(tmp_path, rule.fixture_path, rule.fixture_bad,
+                       select=[code])
+    bl = tmp_path / "baseline.json"
+    baseline_mod.save(bl, res.findings)
+    entries = baseline_mod.load(bl)
+    new, grandfathered, stale = baseline_mod.split(res.findings, entries)
+    assert not new and not stale
+    assert len(grandfathered) == len(res.findings)
+
+
+def test_baseline_is_multiset_not_set(tmp_path):
+    """Two identical offending lines need two entries — a fix cannot
+    hide behind a sibling's grandfathering."""
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        import numpy as np
+        def f():
+            a = np.random.rand(3)
+            b = np.random.rand(3)
+        """, select=["MGD002"])
+    assert len(res.findings) == 2
+    # baseline only one of them: the twin must still be NEW
+    entries = [dict(zip(baseline_mod.KEYS,
+                        res.findings[0].fingerprint()))]
+    new, grandfathered, _ = baseline_mod.split(res.findings, entries)
+    assert len(new) == 1 and len(grandfathered) == 1
+
+
+def test_stale_baseline_entries_are_reported(tmp_path):
+    entries = [{"rule": "MGD002", "path": "src/repro/core/gone.py",
+                "symbol": "f", "snippet": "x = np.random.rand(3)"}]
+    new, grandfathered, stale = baseline_mod.split([], entries)
+    assert not new and not grandfathered and stale == entries
+
+
+# ---------------------------------------------------------------------------
+# waiver syntax / MGD000
+# ---------------------------------------------------------------------------
+
+
+def test_reasonless_waiver_is_mgd000(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        "import numpy as np\n"
+        "x = np.random.rand(3)  # mgdlint: disable=MGD002\n")
+    assert any(f.code == "MGD000" for f in res.findings)
+    # and the reason-less waiver does NOT suppress the finding
+    assert any(f.code == "MGD002" for f in res.findings)
+
+
+def test_unknown_code_waiver_is_mgd000(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        "x = 1  # mgdlint: " + "disable=BOGUS99 (nope)\n")
+    assert any(f.code == "MGD000" for f in res.findings)
+
+
+def test_preceding_comment_line_waiver(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        import numpy as np
+        # mgdlint: disable=MGD002 (legacy notebook parity check)
+        x = np.random.rand(3)
+        """)
+    assert not [f for f in res.findings if f.code == "MGD002"]
+    assert res.waived
+
+
+def test_waiver_for_other_code_does_not_suppress(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        "import numpy as np\n"
+        "x = np.random.rand(3)  # mgdlint: disable=MGD003 (wrong rule)\n")
+    assert any(f.code == "MGD002" for f in res.findings)
+
+
+# ---------------------------------------------------------------------------
+# targeted rule semantics
+# ---------------------------------------------------------------------------
+
+
+def test_mgd001_alias_resolution(tmp_path):
+    """``from jax import numpy as xnp`` must still be caught."""
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/m.py",
+        """\
+        from jax import numpy as xnp
+
+        def _host_read(params):
+            return xnp.mean(params)
+        """, select=["MGD001"])
+    assert len(res.findings) == 1
+
+
+def test_mgd001_function_as_value_reachability(tmp_path):
+    """external.py idiom: the host fn passes ``self._read_txn`` as a
+    VALUE into a guard wrapper — the txn body is still host-side."""
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/m.py",
+        """\
+        import jax.numpy as jnp
+
+        class P:
+            def _host_read(self, p):
+                return self._guarded(self._read_txn, (p,))
+
+            def _read_txn(self, p):
+                return jnp.mean(p)
+
+            def traced_helper(self, p):
+                return jnp.mean(p)   # NOT reachable from the callback
+        """, select=["MGD001"])
+    assert len(res.findings) == 1
+    assert res.findings[0].symbol == "P._read_txn"
+
+
+def test_mgd001_tree_util_allowed(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/backend/m.py",
+        """\
+        import jax
+        import numpy as np
+
+        def pack(tree):
+            return jax.tree_util.tree_map(np.asarray, tree)
+        """, select=["MGD001"])
+    assert not res.findings
+
+
+def test_mgd002_counter_keyed_generators_allowed(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        import numpy as np
+
+        def noise(seed, step, tag, shape):
+            rng = np.random.default_rng((seed, step, tag))
+            return rng.normal(size=shape)
+        """, select=["MGD002"])
+    assert not res.findings
+
+
+def test_mgd002_wall_clock_seed_flagged(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        import time
+        import numpy as np
+
+        def make_rng():
+            return np.random.default_rng(int(time.time()))
+        """, select=["MGD002"])
+    assert len(res.findings) == 1
+    assert "wall-clock" in res.findings[0].message
+
+
+def test_mgd003_multiline_result_call_caught(tmp_path):
+    """The case the old regex missed: the closing paren on another
+    line, or the future aliased first."""
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/m.py",
+        """\
+        def gather(futures):
+            fut = futures[0]
+            return fut.result(
+            )
+        """, select=["MGD003"])
+    assert len(res.findings) == 1
+
+
+def test_mgd004_dtype_access_is_not_tainted(tmp_path):
+    """The real mgd.py idiom: branching on leaf DTYPES is static and
+    legal; branching on leaf VALUES is not."""
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        import jax
+        import jax.numpy as jnp
+
+        def build_step(cfg):
+            def step(params, batch):
+                leaves = jax.tree_util.tree_leaves(params)
+                if all(leaf.dtype == jnp.float32 for leaf in leaves):
+                    out = jnp.zeros(())
+                else:
+                    out = jnp.ones(())
+                return out
+            return step
+        """, select=["MGD004"])
+    assert not res.findings
+
+
+def test_mgd004_builder_level_config_math_allowed(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/core/m.py",
+        """\
+        def build_step(cfg):
+            eta = float(cfg.eta)
+
+            def step(params, batch):
+                return params
+
+            return step
+        """, select=["MGD004"])
+    assert not res.findings
+
+
+def test_mgd005_locked_mutation_passes_unlocked_fails(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/backend/m.py",
+        """\
+        import threading
+
+        class B:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._busy = 0.0
+                self._n = 0
+
+            def good(self, d):
+                with self._lock:
+                    self._busy += d
+
+            def bad(self, d):
+                self._n += 1
+        """, select=["MGD005"])
+    assert len(res.findings) == 1
+    assert res.findings[0].symbol == "B.bad"
+
+
+def test_mgd005_faultlog_bypass_flagged(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/hardware/backend/m.py",
+        """\
+        def leak(fault_log, ev):
+            fault_log.events.append(ev)
+        """, select=["MGD005"])
+    assert len(res.findings) == 1
+
+
+def test_mgd006_only_fence_binding_functions_checked(tmp_path):
+    """train_backprop never touches a plant: eval with no fence is fine
+    there, but a fence-binding loop must fence first."""
+    res = lint_snippet(
+        tmp_path, "src/repro/training/m.py",
+        """\
+        def train_backprop(params, eval_fn):
+            return eval_fn(params)
+
+        def train_mgd(plant, params, eval_fn):
+            fence = getattr(plant, "fence", lambda: None)
+            return eval_fn(params)
+        """, select=["MGD006"])
+    assert len(res.findings) == 1
+    assert res.findings[0].symbol == "train_mgd"
+
+
+def test_mgd006_fence_in_outer_block_counts(tmp_path):
+    res = lint_snippet(
+        tmp_path, "src/repro/training/m.py",
+        """\
+        def train_mgd(plant, params, eval_fn, steps):
+            fence = getattr(plant, "fence", lambda: None)
+            for step in range(steps):
+                fence()
+                if step % 10 == 0:
+                    metric = eval_fn(params)
+            return params
+        """, select=["MGD006"])
+    assert not res.findings
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _cli(args, cwd):
+    env = {"PYTHONPATH": str(REPO / "tools"),
+           "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    return subprocess.run([sys.executable, "-m", "mgdlint"] + args,
+                          cwd=cwd, env=env, capture_output=True,
+                          text=True, timeout=120)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "src/repro/core/m.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\nx = np.random.rand(3)\n")
+    r = _cli(["src", "--root", "."], cwd=tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "MGD002" in r.stdout
+    # grandfather it, then the same tree passes
+    r = _cli(["src", "--root", ".", "--baseline", "bl.json",
+              "--write-baseline"], cwd=tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = _cli(["src", "--root", ".", "--baseline", "bl.json"], cwd=tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "grandfathered" in r.stdout
+    # stale entries only fail under --strict
+    bad.write_text("x = 1\n")
+    r = _cli(["src", "--root", ".", "--baseline", "bl.json"], cwd=tmp_path)
+    assert r.returncode == 0
+    r = _cli(["src", "--root", ".", "--baseline", "bl.json", "--strict"],
+             cwd=tmp_path)
+    assert r.returncode == 1
+    # usage errors are distinct from lint failures
+    r = _cli(["src", "--root", ".", "--select", "MGD999"], cwd=tmp_path)
+    assert r.returncode == 2
+
+
+def test_cli_list_rules(tmp_path):
+    r = _cli(["--list-rules"], cwd=tmp_path)
+    assert r.returncode == 0
+    for code in ALL_CODES:
+        assert code in r.stdout
+
+
+def test_self_test_passes_in_process():
+    assert self_test(verbose=False) == 0
+
+
+def test_repo_baseline_file_is_valid_json_list():
+    path = REPO / "tools/mgdlint/baseline.json"
+    assert path.is_file()
+    assert isinstance(json.loads(path.read_text()), list)
+
+
+def test_walker_qualname_and_alias_resolution(tmp_path):
+    target = tmp_path / "m.py"
+    target.write_text(textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        class C:
+            def meth(self):
+                return jnp.dot
+        """))
+    s = SourceFile(target, tmp_path)
+    import ast as ast_mod
+    attr = next(n for n in ast_mod.walk(s.tree)
+                if isinstance(n, ast_mod.Attribute))
+    assert s.resolve(attr) == "jax.numpy.dot"
+    assert s.qualname(attr) == "C.meth"

@@ -1,0 +1,24 @@
+"""mgdlint — AST-based invariant checker for the MGD repro repo.
+
+Encodes the repo's hard-won host-boundary invariants (counter-keyed
+randomness, numpy-pure io_callbacks, timeout/lock/fence discipline) as
+static rules with per-rule codes, inline waivers and a committed
+baseline.  Stdlib-only: ``PYTHONPATH=tools python -m mgdlint src tests``.
+"""
+from __future__ import annotations
+
+from . import rules as _rules  # noqa: F401  (registers the rule classes)
+from .baseline import load as load_baseline
+from .baseline import save as save_baseline
+from .baseline import split as split_baseline
+from .registry import (RULES, Finding, LintResult, Rule, all_rules,
+                       run_lint)
+from .walker import SourceFile, iter_python_files
+
+__all__ = [
+    "RULES", "Finding", "LintResult", "Rule", "SourceFile", "all_rules",
+    "iter_python_files", "load_baseline", "run_lint", "save_baseline",
+    "split_baseline",
+]
+
+__version__ = "0.1.0"

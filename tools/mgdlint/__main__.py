@@ -1,0 +1,8 @@
+"""``python -m mgdlint`` entry point."""
+from __future__ import annotations
+
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,72 @@
+"""Baseline handling: grandfathered findings committed to the repo.
+
+The baseline file is a sorted JSON list of line-number-free
+fingerprints (``rule``, ``path``, ``symbol``, ``snippet``).  A finding
+matching an entry is *grandfathered* — reported as such, but not a
+failure; anything else is NEW and fails the run.  Matching is multiset
+(two identical offending lines in one function need two entries), so a
+fix cannot hide behind a sibling's entry.
+
+Policy, enforced by review rather than code: ``src/repro/hardware/``
+must carry ZERO baseline entries — the host-boundary invariants are
+exactly the ones that deadlock or corrupt training when violated, so
+hardware findings get fixed or explicitly waived with a reason, never
+grandfathered.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Sequence, Tuple
+
+from .registry import Finding
+
+KEYS = ("rule", "path", "symbol", "snippet")
+
+
+def load(path: pathlib.Path) -> List[dict]:
+    if not path.is_file():
+        return []
+    entries = json.loads(path.read_text())
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: baseline must be a JSON list")
+    for e in entries:
+        missing = [k for k in KEYS if k not in e]
+        if missing:
+            raise ValueError(f"{path}: baseline entry missing "
+                             f"{missing}: {e}")
+    return entries
+
+
+def save(path: pathlib.Path, findings: Sequence[Finding]) -> List[dict]:
+    entries = sorted(
+        ({"rule": f.code, "path": f.path, "symbol": f.symbol,
+          "snippet": f.snippet} for f in findings),
+        key=lambda e: tuple(e[k] for k in KEYS))
+    path.write_text(json.dumps(entries, indent=2) + "\n")
+    return entries
+
+
+def split(findings: Sequence[Finding], entries: Sequence[dict]
+          ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """(new, grandfathered, stale_entries) — multiset matching on the
+    line-number-free fingerprint."""
+    budget: Dict[Tuple[str, str, str, str], int] = {}
+    for e in entries:
+        key = (e["rule"], e["path"], e["symbol"], e["snippet"])
+        budget[key] = budget.get(key, 0) + 1
+    new, grandfathered = [], []
+    for f in findings:
+        key = f.fingerprint()
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            grandfathered.append(f)
+        else:
+            new.append(f)
+    stale = []
+    for e in entries:
+        key = (e["rule"], e["path"], e["symbol"], e["snippet"])
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            stale.append(e)
+    return new, grandfathered, stale

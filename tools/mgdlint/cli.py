@@ -1,0 +1,210 @@
+"""mgdlint command line.
+
+Exit codes: 0 clean (or all findings grandfathered/waived), 1 new
+findings (or parse errors, or stale baseline entries under --strict),
+2 usage error.  ``--self-test`` seeds one violation per rule under a
+temp tree and proves each rule fires, each good fixture passes, waivers
+suppress, and the baseline round-trips — the same never-trust-a-silent-
+gate pattern as ``benchmarks/check_regression.py --self-test``.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import tempfile
+from typing import List, Optional
+
+from . import baseline as baseline_mod
+from .registry import all_rules, run_lint
+
+DEFAULT_BASELINE = "tools/mgdlint/baseline.json"
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="mgdlint",
+        description="AST invariant checker for the MGD repro repo "
+                    "(determinism, host-boundary purity, timeout/lock/"
+                    "fence discipline).")
+    p.add_argument("paths", nargs="*", default=[],
+                   help="files or directories to lint (default: src "
+                        "tests benchmarks, whichever exist)")
+    p.add_argument("--root", type=pathlib.Path, default=None,
+                   help="repo root paths are resolved against "
+                        "(default: cwd)")
+    p.add_argument("--baseline", type=pathlib.Path, default=None,
+                   help=f"baseline file (default: {DEFAULT_BASELINE} "
+                        f"under --root when present)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline to grandfather every "
+                        "current finding, then exit 0")
+    p.add_argument("--select", default=None,
+                   help="comma-separated rule codes to run "
+                        "(default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    p.add_argument("--strict", action="store_true",
+                   help="also fail on stale baseline entries")
+    p.add_argument("--self-test", action="store_true",
+                   help="verify every rule fires on its bad fixture, "
+                        "passes its good fixture, and that waivers + "
+                        "baseline suppress correctly")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="only print failures")
+    return p
+
+
+def _list_rules() -> int:
+    for rule in all_rules():
+        print(f"{rule.code}  {rule.title}")
+        print(f"       {rule.rationale}")
+    return 0
+
+
+def self_test(verbose: bool = True) -> int:
+    """Seed one violation per rule in a temp tree; every rule must fire
+    on its bad fixture, pass its good one, honour a waiver, and be
+    suppressed by a written baseline.  Returns 0 on success."""
+    failures: List[str] = []
+
+    def check(ok: bool, what: str) -> None:
+        if ok:
+            if verbose:
+                print(f"  ok  {what}")
+        else:
+            failures.append(what)
+            print(f"FAIL  {what}", file=sys.stderr)
+
+    for rule in all_rules():
+        with tempfile.TemporaryDirectory(prefix="mgdlint-st-") as tmp:
+            root = pathlib.Path(tmp)
+            target = root / rule.fixture_path
+            target.parent.mkdir(parents=True, exist_ok=True)
+
+            target.write_text(rule.fixture_bad)
+            res = run_lint([target], root, select=[rule.code])
+            fired = [f for f in res.findings if f.code == rule.code]
+            check(bool(fired),
+                  f"{rule.code} fires on its seeded violation")
+
+            target.write_text(rule.fixture_good)
+            res = run_lint([target], root, select=[rule.code])
+            check(not res.findings and not res.parse_errors,
+                  f"{rule.code} passes its good fixture")
+
+            if fired:
+                lines = rule.fixture_bad.splitlines(keepends=True)
+                for idx in sorted({f.line - 1 for f in fired}):
+                    lines[idx] = (lines[idx].rstrip("\n")
+                                  + f"  # mgdlint: disable={rule.code} "
+                                    f"(self-test waiver)\n")
+                target.write_text("".join(lines))
+                res = run_lint([target], root, select=[rule.code])
+                check(not any(f.code == rule.code for f in res.findings)
+                      and len(res.waived) >= 1,
+                      f"{rule.code} waiver suppresses the finding")
+
+                target.write_text(rule.fixture_bad)
+                res = run_lint([target], root, select=[rule.code])
+                bl = root / "baseline.json"
+                baseline_mod.save(bl, res.findings)
+                entries = baseline_mod.load(bl)
+                new, grandfathered, stale = baseline_mod.split(
+                    run_lint([target], root,
+                             select=[rule.code]).findings, entries)
+                check(not new and grandfathered and not stale,
+                      f"{rule.code} baseline round-trip grandfathers it")
+
+    # Malformed waiver (missing reason) must surface as MGD000.
+    with tempfile.TemporaryDirectory(prefix="mgdlint-st-") as tmp:
+        root = pathlib.Path(tmp)
+        bad = root / "src" / "repro" / "core" / "m.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("import numpy as np\n"
+                       "x = np.random.rand(3)"
+                       "  # mgdlint: disable=MGD002\n")
+        res = run_lint([bad], root)
+        check(any(f.code == "MGD000" for f in res.findings),
+              "MGD000 reports a reason-less waiver")
+
+    if failures:
+        print(f"mgdlint --self-test: {len(failures)} check(s) FAILED",
+              file=sys.stderr)
+        return 1
+    if verbose:
+        print(f"mgdlint --self-test: all rules fire, pass, waive and "
+              f"baseline correctly ({len(all_rules())} rules)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+    if args.list_rules:
+        return _list_rules()
+    if args.self_test:
+        return self_test(verbose=not args.quiet)
+
+    root = (args.root or pathlib.Path.cwd()).resolve()
+    paths = [pathlib.Path(p) for p in args.paths]
+    if not paths:
+        paths = [root / d for d in ("src", "tests", "benchmarks")
+                 if (root / d).is_dir()]
+        if not paths:
+            print("mgdlint: no paths given and no default directories "
+                  "found", file=sys.stderr)
+            return 2
+
+    select = None
+    if args.select:
+        select = [c.strip() for c in args.select.split(",") if c.strip()]
+
+    try:
+        result = run_lint(paths, root, select=select)
+    except (FileNotFoundError, ValueError) as e:
+        print(f"mgdlint: {e}", file=sys.stderr)
+        return 2
+
+    baseline_path = args.baseline or (root / DEFAULT_BASELINE)
+    if args.write_baseline:
+        entries = baseline_mod.save(baseline_path, result.findings)
+        print(f"mgdlint: wrote {len(entries)} baseline entr"
+              f"{'y' if len(entries) == 1 else 'ies'} to "
+              f"{baseline_path}")
+        return 0
+
+    try:
+        entries = baseline_mod.load(baseline_path)
+    except ValueError as e:
+        print(f"mgdlint: {e}", file=sys.stderr)
+        return 2
+    new, grandfathered, stale = baseline_mod.split(result.findings,
+                                                   entries)
+
+    for err in result.parse_errors:
+        print(f"mgdlint: parse error: {err}", file=sys.stderr)
+    for f in new:
+        print(f.format())
+
+    failed = bool(new or result.parse_errors
+                  or (args.strict and stale))
+    if not args.quiet or failed:
+        bits = [f"{result.files_checked} files",
+                f"{len(new)} new finding(s)"]
+        if grandfathered:
+            bits.append(f"{len(grandfathered)} grandfathered")
+        if result.waived:
+            bits.append(f"{len(result.waived)} waived")
+        if stale:
+            bits.append(f"{len(stale)} stale baseline entr"
+                        f"{'y' if len(stale) == 1 else 'ies'}")
+        print(f"mgdlint: {', '.join(bits)}")
+    if stale and args.strict:
+        for e in stale:
+            print(f"mgdlint: stale baseline entry: {e['rule']} "
+                  f"{e['path']} [{e['symbol']}]", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

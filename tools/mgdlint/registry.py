@@ -1,0 +1,141 @@
+"""Rule registry + the lint engine.
+
+A rule is a class with a ``code`` (MGDxxx), a path scope
+(``applies(rel)``) and a ``check(source) -> [Finding]``.  Rules register
+themselves via the ``@register`` decorator at import time
+(``rules.py``); the engine parses each file once and hands the shared
+``SourceFile`` to every applicable rule.
+
+Waivers are applied here, not in rules: a rule always reports what it
+sees, and the engine drops findings covered by a well-formed inline
+waiver — so ``--no-waivers`` style auditing stays possible and waiver
+bookkeeping (malformed waivers become MGD000 findings) lives in one
+place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+from .walker import SourceFile, iter_python_files
+
+#: Pseudo-code for waiver-syntax problems (not a registrable rule:
+#: a malformed waiver can never be waived).
+WAIVER_CODE = "MGD000"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    code: str
+    path: str                   # POSIX path relative to the lint root
+    line: int
+    col: int
+    message: str
+    symbol: str                 # enclosing qualname — baseline anchor
+    snippet: str                # stripped source line — baseline anchor
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Line-number-free identity used for baseline matching, so
+        unrelated edits above a grandfathered finding don't churn the
+        baseline file."""
+        return (self.code, self.path, self.symbol, self.snippet)
+
+    def format(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol != "<module>" else ""
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"{self.message}{sym}")
+
+
+class Rule:
+    """Base class: subclasses set ``code``/``title``/``rationale`` and
+    implement ``applies``/``check``.  ``fixture_path``/``fixture_bad``/
+    ``fixture_good`` drive both ``--self-test`` and the pytest fixture
+    suite — every rule must prove it fires and that clean code passes."""
+
+    code: str = ""
+    title: str = ""
+    rationale: str = ""
+    fixture_path: str = ""      # where the fixture lives under a fake root
+    fixture_bad: str = ""       # snippet the rule MUST flag
+    fixture_good: str = ""      # snippet the rule MUST pass
+
+    def applies(self, rel: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, source: SourceFile) -> List[Finding]:
+        raise NotImplementedError
+
+    # -- helpers for subclasses ---------------------------------------------
+
+    def finding(self, source: SourceFile, node, message: str) -> Finding:
+        line = getattr(node, "lineno", 0)
+        return Finding(code=self.code, path=source.rel, line=line,
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, symbol=source.qualname(node),
+                       snippet=source.snippet(line))
+
+
+RULES: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    if not cls.code or cls.code in RULES:
+        raise ValueError(f"bad or duplicate rule code {cls.code!r}")
+    RULES[cls.code] = cls
+    return cls
+
+
+def all_rules(select: Optional[Sequence[str]] = None) -> List[Rule]:
+    codes = sorted(RULES) if not select else list(select)
+    unknown = [c for c in codes if c not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule code(s): {', '.join(unknown)} — "
+                         f"registered: {', '.join(sorted(RULES))}")
+    return [RULES[c]() for c in codes]
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]             # violations after waivers
+    waived: List[Finding]               # suppressed by inline waivers
+    files_checked: int
+    parse_errors: List[str]
+
+
+def run_lint(paths: Sequence[pathlib.Path], root: pathlib.Path,
+             select: Optional[Sequence[str]] = None) -> LintResult:
+    """Parse every file once, run each applicable rule, apply waivers,
+    and report malformed waivers as MGD000 findings."""
+    rules = all_rules(select)
+    findings: List[Finding] = []
+    waived: List[Finding] = []
+    parse_errors: List[str] = []
+    n_files = 0
+    for path in iter_python_files(paths, root):
+        try:
+            source = SourceFile(path, root)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            parse_errors.append(f"{path}: {e}")
+            continue
+        n_files += 1
+        for rule in rules:
+            if not rule.applies(source.rel):
+                continue
+            for f in rule.check(source):
+                if source.waived(f.code, f.line):
+                    waived.append(f)
+                else:
+                    findings.append(f)
+        for w in source.waivers:
+            why = w.malformed
+            if why:
+                findings.append(Finding(
+                    code=WAIVER_CODE, path=source.rel, line=w.line, col=1,
+                    message=f"malformed waiver ({why}): {w.raw}",
+                    symbol="<module>", snippet=source.snippet(w.line)))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return LintResult(findings=findings, waived=waived,
+                      files_checked=n_files, parse_errors=parse_errors)

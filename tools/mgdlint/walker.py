@@ -1,0 +1,220 @@
+"""AST walking infrastructure shared by every mgdlint rule.
+
+``SourceFile`` parses one Python file once and exposes everything a rule
+needs: the AST with parent links, the enclosing-scope qualname of any
+node, a resolved import-alias table (so ``jnp.dot`` is recognised as
+``jax.numpy.dot`` regardless of the local alias), dotted-name rendering
+for call targets, and the inline waiver table
+(``# mgdlint: disable=MGDxxx (reason)``).
+
+Everything here is stdlib-only — the linter must run on a bare CI box
+before any project dependency is installed.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+#: Inline waiver syntax.  The reason is MANDATORY: an unexplained waiver
+#: is itself reported (as MGD000) — every suppression must say why.
+WAIVER_RE = re.compile(
+    r"#\s*mgdlint:\s*disable=([A-Za-z0-9_,\s]+?)\s*(?:\((.*)\))?\s*$")
+
+CODE_RE = re.compile(r"^MGD\d{3}$")
+
+
+class Waiver:
+    """One parsed ``# mgdlint: disable=...`` comment."""
+
+    __slots__ = ("line", "codes", "reason", "raw", "used")
+
+    def __init__(self, line: int, codes: Tuple[str, ...],
+                 reason: Optional[str], raw: str):
+        self.line = line
+        self.codes = codes
+        self.reason = reason
+        self.raw = raw
+        self.used = False
+
+    @property
+    def malformed(self) -> Optional[str]:
+        """Why this waiver is invalid, or None when well-formed."""
+        bad = [c for c in self.codes if not CODE_RE.match(c)]
+        if bad:
+            return f"unknown rule code(s) {', '.join(bad)}"
+        if not self.reason or not self.reason.strip():
+            return ("missing reason — write "
+                    "`# mgdlint: disable=MGDxxx (why this is safe)`")
+        return None
+
+
+def _parse_waivers(lines: Sequence[str]) -> List[Waiver]:
+    waivers = []
+    for i, line in enumerate(lines, start=1):
+        m = WAIVER_RE.search(line)
+        if m:
+            codes = tuple(c.strip() for c in m.group(1).split(",")
+                          if c.strip())
+            waivers.append(Waiver(i, codes, m.group(2), line.strip()))
+    return waivers
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as ``a.b.c`` (None for anything
+    dynamic, e.g. a subscript or call in the chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class SourceFile:
+    """One parsed file: AST + parents + aliases + waivers.
+
+    ``rel`` is the POSIX-style path relative to the lint root — the key
+    every rule scopes on and every baseline entry records, so a checkout
+    moved to another directory keeps its baseline.
+    """
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        self.rel = path.resolve().relative_to(root.resolve()).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self.waivers = _parse_waivers(self.lines)
+        self._waivers_by_line: Dict[int, List[Waiver]] = {}
+        for w in self.waivers:
+            self._waivers_by_line.setdefault(w.line, []).append(w)
+        self.import_aliases = self._collect_aliases()
+
+    # -- structure helpers ---------------------------------------------------
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def qualname(self, node: ast.AST) -> str:
+        """Enclosing scope name, e.g. ``ChipFarm._host_pairs`` — the
+        symbol a baseline entry anchors on (stable under line churn)."""
+        names = []
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                names.append(anc.name)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.insert(0, node.name)
+        return ".".join(reversed(names)) or "<module>"
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def enclosing_function(self, node: ast.AST) \
+            -> Optional[ast.FunctionDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    # -- imports -------------------------------------------------------------
+
+    def _collect_aliases(self) -> Dict[str, str]:
+        """local name -> fully-dotted module/object path, from every
+        import statement in the file (any nesting level)."""
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+        return aliases
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Fully-qualified dotted path of a Name/Attribute chain after
+        import-alias substitution: with ``import jax.numpy as jnp``,
+        ``jnp.dot`` resolves to ``jax.numpy.dot``."""
+        name = dotted_name(node)
+        if name is None:
+            return None
+        root, _, rest = name.partition(".")
+        target = self.import_aliases.get(root)
+        if target is None:
+            return name
+        return f"{target}.{rest}" if rest else target
+
+    # -- waivers -------------------------------------------------------------
+
+    def waived(self, code: str, line: int) -> bool:
+        """True when a well-formed waiver for ``code`` sits on ``line``
+        or on the immediately preceding (comment-only) line."""
+        for probe in (line, line - 1):
+            for w in self._waivers_by_line.get(probe, ()):
+                if w.malformed:
+                    continue
+                if probe == line - 1 and not \
+                        self.lines[probe - 1].lstrip().startswith("#"):
+                    continue        # trailing waiver governs its own line
+                if code in w.codes:
+                    w.used = True
+                    return True
+        return False
+
+
+def iter_python_files(paths: Sequence[pathlib.Path],
+                      root: pathlib.Path) -> Iterator[pathlib.Path]:
+    """Yield every ``*.py`` under ``paths`` (files or directories),
+    deterministically ordered, skipping caches and hidden directories."""
+    seen: Set[pathlib.Path] = set()
+    for p in paths:
+        p = pathlib.Path(p)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file() and p.suffix == ".py":
+            candidates = [p]
+        elif p.is_dir():
+            candidates = sorted(p.rglob("*.py"))
+        else:
+            raise FileNotFoundError(f"mgdlint: no such path: {p}")
+        for c in candidates:
+            parts = c.relative_to(root).parts if c.is_relative_to(root) \
+                else c.parts
+            if any(part == "__pycache__" or part.startswith(".")
+                   for part in parts):
+                continue
+            c = c.resolve()
+            if c not in seen:
+                seen.add(c)
+                yield c
+
+
+def call_positional_count(call: ast.Call) -> int:
+    return len(call.args)
+
+
+def call_has_kwarg(call: ast.Call, name: str) -> bool:
+    return any(k.arg == name for k in call.keywords)
