@@ -66,6 +66,19 @@ TOLERANCES = [
      dict(abs=0.15, direction="min")),
     ("farm_scaling", "thread_over_process_*",
      dict(rel=0.50, direction="min")),
+    # scaling_laws — the acceptance laws: the mesh ≡ farm bit-equality
+    # row gates at zero, the 1/k variance ratios and per-k variances in
+    # the same bands as farm_scaling, accuracy gates the drop only, and
+    # the pure-arithmetic N counts / projections gate tight
+    ("scaling_laws", "mesh_farm_bitmatch_f32", dict(abs=0.0)),
+    ("scaling_laws", "mesh_ghat_variance_*", dict(rel=0.75)),
+    ("scaling_laws", "mesh_variance_ratio_replicated_*", dict(rel=0.5)),
+    ("scaling_laws", "ghat_variance_N*", dict(rel=0.75)),
+    ("scaling_laws", "xor_accuracy_k*", dict(abs=0.25, direction="min")),
+    ("scaling_laws", "xor_cost_k*", dict(rel=0.5, direction="max")),
+    ("scaling_laws", "params_*", dict(rel=0.001)),
+    ("scaling_laws", "projected_probe_budget_*", dict(rel=0.01)),
+    ("scaling_laws", "projected_step_s_*", dict(rel=0.01)),
     # fused_probe — only the arithmetic W-read identities gate; the
     # steps/s rows are machine-dependent and stay informational
     ("fused_probe", "*_wread_ratio", dict(rel=0.001)),

@@ -165,4 +165,102 @@ def run(seed: int = 0):
                                                writes_per_step=0),
             "detail": "1e4-step xor budget × PlantMeta read latency",
         })
+    rows += stability_grid_rows(seed)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# write_tau × tau_theta stability grid (§5 slow-write bound)
+# ---------------------------------------------------------------------------
+#
+# The analog constraint: the parameter move per persistent write,
+# η·|G|·dt (dt = τ_θ steps of accumulated update), must stay well under
+# Δθ or the probes measure a plant that has already moved — and a slow
+# write (τ_w > 0) makes it worse by low-pass filtering the writes, so
+# the chip lags the optimizer by ≈ τ_w additional write periods.  Each
+# grid cell reports the MEASURED bound ratio η·|ĝ|·dt_eff/Δθ (median
+# per-write max-abs host update over dt_eff = τ_θ·(1+τ_w), divided by
+# Δθ) next to the steps-to-solve, so EXPERIMENTS.md can record the
+# frontier ratio separating solving from non-solving cells.
+STABILITY_WRITE_TAUS = (0.0, 4.0, 16.0)
+STABILITY_TAU_THETAS = (1, 8, 32)
+
+
+def _bound_ratio(write_tau, tau_theta, seed, writes=100):
+    """Measured η·|ĝ|·dt/Δθ: MEAN max-abs parameter change across a
+    write interval, over the first ``writes`` intervals, in Δθ units
+    scaled by the slow-write lag factor (1 + τ_w).  Mean, not median:
+    through a quantized DAC the update stream goes zero-heavy once the
+    driver reaches a code plateau, and the median of a zero-heavy
+    stream reads 0.0 even while the transient moved whole LSBs."""
+    plant = quantized_mlp_plant((2, 2, 1), device_seed=seed, bits=12,
+                                w_clip=8.0, write_tau=write_tau)
+    cfg = DriverConfig(dtheta=1e-2, eta=1.0, mode="forward",
+                       tau_theta=tau_theta, seed=seed)
+    x, y = tasks.xor_dataset()
+    batch = {"x": x, "y": y}
+    mgd = driver("discrete", cfg, None, plant=plant)
+    p = mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
+    s = mgd.init(p)
+    prev = jnp.concatenate([jnp.ravel(l)
+                            for l in jax.tree_util.tree_leaves(p)])
+    deltas = []
+    for n in range(writes * tau_theta):
+        p, s, _ = mgd.step(p, s, batch)
+        if (n + 1) % tau_theta == 0:
+            flat = jnp.concatenate([jnp.ravel(l)
+                                    for l in jax.tree_util.tree_leaves(p)])
+            deltas.append(float(jnp.max(jnp.abs(flat - prev))))
+            prev = flat
+    return (sum(deltas) / len(deltas)) * (1.0 + write_tau) / cfg.dtheta
+
+
+def stability_grid_rows(seed: int = 0):
+    """One row pair (steps-to-solve, bound ratio) per grid cell, plus the
+    measured frontier: the largest bound ratio that still solved and the
+    smallest that failed."""
+    rows = []
+    solved_ratios, failed_ratios = [], []
+    for wt in STABILITY_WRITE_TAUS:
+        for tt in STABILITY_TAU_THETAS:
+            cell = f"wtau{wt:g}_tautheta{tt}"
+            cfg = DriverConfig(dtheta=1e-2, eta=1.0, mode="forward",
+                               tau_theta=tt)
+            x, y = tasks.xor_dataset()
+            times = []
+            for s in range(seed, seed + N_SEEDS):
+                plant = quantized_mlp_plant((2, 2, 1), device_seed=s,
+                                            bits=12, w_clip=8.0,
+                                            write_tau=wt)
+                params = mlp_init(jax.random.PRNGKey(s), (2, 2, 1))
+
+                def thresh(p, plant=plant):
+                    return float(plant.loss_fn(p, {"x": x, "y": y})) < 0.04
+
+                _, steps, ok = train_until(
+                    None, params, cfg, dataset_sampler(x, y, 1),
+                    max_steps=40000, threshold_fn=thresh, chunk=2000,
+                    plant=plant)
+                times.append(steps if ok else None)
+            solved = [t for t in times if t is not None]
+            ratio = _bound_ratio(wt, tt, seed)
+            (solved_ratios if len(solved) > N_SEEDS // 2
+             else failed_ratios).append(ratio)
+            rows.append({
+                "bench": "hw_plants", "name": f"stability_{cell}_steps",
+                "value": median(solved) if solved else -1,
+                "detail": f"{len(solved)}/{N_SEEDS} solved; write_tau={wt} "
+                          f"tau_theta={tt}"})
+            rows.append({
+                "bench": "hw_plants", "name": f"stability_{cell}_bound",
+                "value": ratio,
+                "detail": "measured η·|ĝ|·τ_θ·(1+τ_w)/Δθ (≪1 ⇒ stable)"})
+    rows.append({
+        "bench": "hw_plants", "name": "stability_frontier_max_solved_bound",
+        "value": max(solved_ratios) if solved_ratios else -1,
+        "detail": "largest bound ratio among solving cells"})
+    rows.append({
+        "bench": "hw_plants", "name": "stability_frontier_min_failed_bound",
+        "value": min(failed_ratios) if failed_ratios else -1,
+        "detail": "smallest bound ratio among non-solving cells"})
     return rows

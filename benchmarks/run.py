@@ -19,6 +19,7 @@ import time
 import traceback
 
 BENCHES = [
+    "scaling_laws",
     "fig4_equivalence",
     "fig5_angle",
     "fig6_tau_theta",

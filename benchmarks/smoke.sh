@@ -43,6 +43,10 @@ run python -m pytest -x -q tests/test_kernels.py tests/test_fused_probe.py \
     tests/test_driver_api.py
 run python -m benchmarks.run --list
 run python -m benchmarks.run --only fused_probe --seed 0 --out "$OUT"
+# scaling laws: 1/k variance on a virtual 8-device mesh + the
+# batch-sharded mesh == chip-farm bit-equality row (gated at zero)
+run env XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.run --only scaling_laws --smoke --seed 0 --out "$OUT"
 # chip farm: host-thread probe fan-out exercised on every PR
 run python -m benchmarks.run --only farm_scaling --smoke --seed 0 --out "$OUT"
 # farm backends: each backend's GIL-bound throughput sweep runs on its

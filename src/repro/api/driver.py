@@ -350,16 +350,19 @@ def _build_analog(cfg, loss_fn, *, plant=None, probe_fn=None, mesh=None,
 @register_driver("probe_parallel")
 def _build_probe_parallel(cfg, loss_fn, *, plant=None, probe_fn=None,
                           mesh=None, total_params=None, probe_axis="pod",
-                          param_specs=None, batch_specs=None) -> MGDDriver:
+                          data_axis=None, param_specs=None,
+                          batch_specs=None) -> MGDDriver:
     from repro.core.probe_parallel import build_probe_parallel_step
 
     if mesh is None:
         raise ValueError("repro.driver('probe_parallel', ...) needs a mesh= "
                          "with the probe axis (default name 'pod') — each "
                          "mesh slice along it evaluates one probe")
-    if probe_fn is not None:
-        raise ValueError("probe_parallel has no fused probe path yet — "
-                         "probe_fn belongs to the discrete driver")
+    fused = getattr(cfg, "fused", False)
+    if probe_fn is not None and not fused:
+        raise ValueError("probe_parallel only takes a probe_fn on its fused "
+                         "path — set DriverConfig(fused=True) so every pod "
+                         "probes through the Pallas kernels")
     if isinstance(cfg, DriverConfig) and cfg.probes != 1:
         raise ValueError(f"probes={cfg.probes} conflicts with "
                          "probe_parallel: the probe count IS the mesh's "
@@ -371,8 +374,9 @@ def _build_probe_parallel(cfg, loss_fn, *, plant=None, probe_fn=None,
                          "composes at the driver level, not inside the "
                          "shard_map step")
     raw = build_probe_parallel_step(
-        loss_fn, mcfg, mesh, probe_axis=probe_axis, param_specs=param_specs,
-        batch_specs=batch_specs, plant=plant)
+        loss_fn, mcfg, mesh, probe_axis=probe_axis, data_axis=data_axis,
+        param_specs=param_specs, batch_specs=batch_specs, plant=plant,
+        probe_fn=probe_fn)
 
     def init(params):
         return ProbeParallelState(step=jnp.zeros((), jnp.int32))

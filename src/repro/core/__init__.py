@@ -8,7 +8,7 @@ from .mgd import (MGDConfig, MGDState, build_mgd_step, make_mgd_epoch,
                   make_mgd_step, mgd_init)
 from .analog import (AnalogMGDConfig, AnalogMGDState, analog_init,
                      build_analog_step, make_analog_step)
-from .cost import mse, softmax_xent, COSTS
+from .cost import mae, mse, softmax_xent, COSTS
 from . import perturbations, noise, forward_grad, utils
 
 __all__ = [
@@ -16,6 +16,6 @@ __all__ = [
     "make_mgd_epoch",
     "AnalogMGDConfig", "AnalogMGDState", "analog_init", "build_analog_step",
     "make_analog_step",
-    "mse", "softmax_xent", "COSTS",
+    "mae", "mse", "softmax_xent", "COSTS",
     "perturbations", "noise", "forward_grad", "utils",
 ]

@@ -17,6 +17,14 @@ def mse(y, y_hat):
     return jnp.mean(d * d)
 
 
+def mae(y, y_hat):
+    """Mean absolute error.  With dyadic inputs every intermediate is
+    exact in f32 (|·| and power-of-two means don't round), which makes
+    this the cost of choice for bit-equality calibration against
+    ``hardware.devices.LinearLaneChip``."""
+    return jnp.mean(jnp.abs(y.astype(jnp.float32) - y_hat.astype(jnp.float32)))
+
+
 def softmax_xent(logits, labels, ignore_id=-1):
     """Token-mean softmax cross entropy; labels == ignore_id are masked."""
     logits = logits.astype(jnp.float32)

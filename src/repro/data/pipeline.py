@@ -7,7 +7,9 @@ builders here return ``sample_fn(sample_index) -> batch`` callables that
 index, so training is deterministic across restarts and hosts.
 
 ``shard_batch`` places a global batch onto a mesh with the "batch" logical
-axes (used by the launch drivers).
+axes (used by the launch drivers); ``shard_chip_batch`` is its host-side
+twin for chip farms — contiguous per-chip slices matching the mesh's pod
+blocks, so batch-sharded farm and mesh runs stay bit-comparable.
 """
 from __future__ import annotations
 
@@ -71,3 +73,35 @@ def shard_batch(batch, mesh):
         return jax.device_put(x, NamedSharding(mesh, spec))
 
     return jax.tree_util.tree_map(put, batch)
+
+
+def shard_chip_batch(batch, n_chips: int, chip: int):
+    """Chip ``chip``'s contiguous leading-dim shard out of ``n_chips``.
+
+    The host twin of the mesh's ``P("pod")`` block placement: chip i and
+    pod i of an equal-k mesh consume the identical rows, which is what
+    extends the farm ≡ mesh bit-equality law to sharded batches
+    (``ChipFarm(shard_batch=True)`` slices through this).  Pure indexing
+    on numpy or jax leaves — host-callback safe.
+    """
+
+    def one(x):
+        per = x.shape[0] // n_chips
+        return x[chip * per:(chip + 1) * per]
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def check_chip_shardable(batch, n_chips: int) -> None:
+    """Raise unless every batch leaf's leading dim splits evenly into
+    ``n_chips`` contiguous shards (the mesh twin enforces the same
+    divisibility through its PartitionSpec)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(batch)[0]:
+        shape = getattr(leaf, "shape", ())
+        if not shape or shape[0] % n_chips:
+            name = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            raise ValueError(
+                f"batch leaf {name!r} with shape {tuple(shape)} cannot be "
+                f"sharded over {n_chips} chips — its leading dim must be a "
+                f"multiple of the farm size")

@@ -32,8 +32,9 @@ from .backend import (BACKENDS, ClusterStubBackend, DeviceSpec,
                       FarmBackend, ProcessBackend, SerialBackend,
                       ThreadBackend, loopback_transport, make_backend)
 from .base import IdealPlant, Plant, PlantMeta
-from .devices import (DriftingAnalogChip, SimulatedAnalogChip,
-                      mlp_device_fns, noisy_mlp_plant, quantized_mlp_plant)
+from .devices import (DriftingAnalogChip, LinearLaneChip,
+                      SimulatedAnalogChip, mlp_device_fns, noisy_mlp_plant,
+                      quantized_mlp_plant)
 from .external import ExternalPlant
 from .farm import ChipFarm, simulated_chip_farm
 from .faults import (DEFAULT_TIMEOUT_S, ChipFaultError, ChipHealth,
@@ -45,7 +46,8 @@ from .plants import (DriftingPlant, NoisyPlant, QuantizedPlant,
 __all__ = [
     "Plant", "PlantMeta", "IdealPlant", "NoisyPlant", "QuantizedPlant",
     "DriftingPlant", "ExternalPlant", "ChipFarm", "plant_from_config",
-    "SimulatedAnalogChip", "DriftingAnalogChip", "mlp_device_fns",
+    "SimulatedAnalogChip", "DriftingAnalogChip", "LinearLaneChip",
+    "mlp_device_fns",
     "noisy_mlp_plant", "quantized_mlp_plant", "simulated_chip_farm",
     "ChipFaultError", "ChipHealth", "DEFAULT_TIMEOUT_S", "FarmHealth",
     "FaultEvent", "FaultLog", "FaultPolicy", "FaultSpec", "FaultyChip",

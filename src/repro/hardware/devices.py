@@ -323,3 +323,69 @@ class DriftingAnalogChip(SimulatedAnalogChip):
         for j in range(self._write_step, int(step) + 1):
             params = self._drift_once(params, j)
         return params
+
+
+class LinearLaneChip:
+    """Bit-transparent affine readout lane: ``C = mean(|x @ w + b − y|)``
+    with NO noise, NO defects and NO nonlinearity.
+
+    This is the calibration device for the farm ≡ mesh bit-equality
+    law.  Driven with dyadic-rational parameters (multiples of 2^-m),
+    probe amplitudes that are powers of two and {0,1} data, every
+    intermediate value of the cost — products, partial sums, |·|, the
+    power-of-two batch mean — is exactly representable in f32, so the
+    numpy arithmetic here and the XLA arithmetic of the jax twin
+    (``models.simple.linear_apply`` + ``mae``) produce identical bits
+    no matter how either side associates or fuses the operations.
+    Tests use it to pin the batch-sharded k-chip farm against the
+    k-pod mesh where a defective-sigmoid chip would diverge in the
+    last ulp for libm reasons unrelated to the optimizer.
+
+    Same transaction surface as ``SimulatedAnalogChip``: ``set_params``
+    (counted, exact), ``measure_cost``, the differential ``measure_pair``
+    probe line, and a threshold ``measure_accuracy`` readout.  Pure
+    numpy — host-callback safe.
+    """
+
+    def __init__(self, *, seed: int = 0):
+        del seed  # noiseless; accepted so farm builders can fan out seeds
+        self._params = None
+        self.writes = 0
+        self.meta = PlantMeta(name="linear-lane", external=True)
+
+    def set_params(self, params):
+        """Exact (noise-free) weight write."""
+        self.writes += 1
+        self._params = jax.tree_util.tree_map(
+            lambda w: np.asarray(w, np.float32), params)
+
+    def _forward(self, x, params=None):
+        h = np.asarray(x, np.float32)
+        for layer in (self._params if params is None else params):
+            h = h @ layer["w"]
+            if "b" in layer:
+                h = h + layer["b"]
+        return h
+
+    def _cost(self, params, batch):
+        err = self._forward(batch["x"], params) - np.asarray(
+            batch["y"], np.float32)
+        return float(np.mean(np.abs(err), dtype=np.float32))
+
+    def measure_cost(self, batch, *, step=None, tag=None):
+        """Exact L1 cost readout."""
+        return self._cost(self._params, batch)
+
+    def measure_pair(self, theta, batch, *, step=None, tag=None):
+        """(C(θ+θ̃), C(θ−θ̃)) with θ̃ applied exactly on the probe line."""
+        plus = jax.tree_util.tree_map(
+            lambda w, t: w + np.asarray(t, np.float32), self._params, theta)
+        minus = jax.tree_util.tree_map(
+            lambda w, t: w - np.asarray(t, np.float32), self._params, theta)
+        return self._cost(plus, batch), self._cost(minus, batch)
+
+    def measure_accuracy(self, batch, *, step=None):
+        """Fraction of outputs on the correct side of 1/2."""
+        pred = self._forward(batch["x"])
+        return float(np.mean((pred > 0.5)
+                             == (np.asarray(batch["y"]) > 0.5)))

@@ -22,6 +22,13 @@ instrument* boundary the optimizer cannot trace into:
 * Devices with a differential probe line (``measure_pair``) pay one
   persistent base-θ write per pair; plain 2-method devices fall back to
   two perturbed-tree writes (see ``external.py``).
+* ``shard_batch=True`` feeds chip i the i-th contiguous leading-dim
+  slice of each probe batch instead of the whole batch — the farm twin
+  of the mesh driver's ``P("pod")`` batch placement, closing the
+  every-chip-sees-the-same-data gap.  Probe I/O shrinks k× and the
+  averaged C̃ estimates ∇(mean of the per-shard costs), the same target
+  a batch-sharded k-pod mesh trains; ``measure_accuracy`` still
+  evaluates every chip on the FULL bench batch.
 
 **Execution backends** (``backend="thread" | "process" | "serial" |
 "cluster"`` or a ``FarmBackend`` instance — see ``hardware/backend/``):
@@ -98,6 +105,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.pipeline import check_chip_shardable, shard_chip_batch
+
 from .backend import DeviceSpec, FarmBackend, make_backend
 from .base import Plant, PlantMeta
 from .devices import DriftingAnalogChip, SimulatedAnalogChip
@@ -133,7 +142,8 @@ class ChipFarm(Plant):
     backends) or picklable ``DeviceSpec``s (required by the process and
     cluster backends, accepted by all).  ``backend`` picks who executes
     the transactions; ``pipeline=True`` double-buffers parameter writes
-    against the next probe round.  ``fault_policy`` arms the host
+    against the next probe round; ``shard_batch=True`` slices each probe
+    batch into contiguous per-chip shards (mesh-``P("pod")`` layout).  ``fault_policy`` arms the host
     boundary: per-attempt timeouts, retries with exponential backoff,
     per-chip masking on exhaustion, quarantine/readmission via the
     ``health`` registry, and the robust aggregation mode
@@ -151,7 +161,8 @@ class ChipFarm(Plant):
                  max_workers: Optional[int] = None,
                  fault_policy: Optional[FaultPolicy] = None,
                  fault_log: Optional[FaultLog] = None,
-                 backend="thread", pipeline: bool = False):
+                 backend="thread", pipeline: bool = False,
+                 shard_batch: bool = False):
         del max_workers                 # legacy knob: one worker per chip
         entries = list(devices)
         if not entries:
@@ -167,6 +178,7 @@ class ChipFarm(Plant):
             raise TypeError(f"fault_policy must be a hardware.FaultPolicy, "
                             f"got {type(fault_policy).__name__}")
         self.devices = entries
+        self.shard_batch = bool(shard_batch)
         self.policy = fault_policy
         self.fault_log = fault_log if fault_log is not None else FaultLog()
         self.pipeline = bool(pipeline)
@@ -357,10 +369,18 @@ class ChipFarm(Plant):
         # tasks — by then effectively free — so write errors still
         # surface before this round's costs are consumed.
         pending, self._pending_writes = self._pending_writes, []
+        if self.shard_batch:
+            # contiguous per-chip slices — the block layout a k-pod mesh's
+            # P("pod") batch spec produces, so chip i and pod i probe the
+            # identical rows (the bit-equality law under batch sharding)
+            batches = [shard_chip_batch(batch, k, i) for i in range(k)]
+        else:
+            batches = [batch] * k
         if self.policy is None:
             tasks = [
                 self.backend.submit(i, "pair",
-                                    (params, thetas[i], batch, step, 2 * i))
+                                    (params, thetas[i], batches[i],
+                                     step, 2 * i))
                 for i in range(k)
             ]
             self._resolve_writes(pending)
@@ -379,7 +399,7 @@ class ChipFarm(Plant):
             return np.asarray(pairs, np.float32), np.ones(k, bool)
         futures = [
             self._supervisors.submit(self._chip_pair_robust, i, params,
-                                     thetas[i], batch, step)
+                                     thetas[i], batches[i], step)
             for i in range(k)
         ]
         self._resolve_writes(pending)
@@ -422,6 +442,10 @@ class ChipFarm(Plant):
         if len(thetas) != self.n_chips:
             raise ValueError(f"{len(thetas)} probe trees for "
                              f"{self.n_chips} chips")
+        if self.shard_batch:
+            # shapes are static at trace time — fail the build, not the
+            # host callback mid-run
+            check_chip_shardable(batch, self.n_chips)
         return _io_callback(
             self._host_pairs,
             (jax.ShapeDtypeStruct((self.n_chips, 2), jnp.float32),
@@ -512,8 +536,8 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
                         max_workers: Optional[int] = None,
                         faults=None, fault_seed: int = 1000,
                         fault_policy: Optional[FaultPolicy] = None,
-                        backend="thread", pipeline: bool = False
-                        ) -> ChipFarm:
+                        backend="thread", pipeline: bool = False,
+                        shard_batch: bool = False) -> ChipFarm:
     """A farm of k ``SimulatedAnalogChip``s with DISTINCT device seeds —
     k different physical chips (different defect draws, different noise
     streams), the same instrument replicated k× on the bench.
@@ -593,6 +617,7 @@ def simulated_chip_farm(k: int, sizes: Sequence[int] = (49, 4, 4), *,
     return ChipFarm(
         devices, max_workers=max_workers, fault_policy=fault_policy,
         fault_log=fault_log, backend=be, pipeline=pipeline,
+        shard_batch=shard_batch,
         meta=PlantMeta(name=f"sim-farm-{k}" + ("-drift" if drifting else ""),
                        cost_noise=sigma_c, write_noise=sigma_theta,
                        sigma_a=sigma_a, external=True, chips=k,

@@ -66,6 +66,21 @@ def mlp_apply_perturbed(params, x, probe,
     return xs
 
 
+def linear_apply(params, x):
+    """Affine chain with NO activation — the jax twin of
+    ``hardware.devices.LinearLaneChip``'s forward.  Same layer pytree
+    shape as ``mlp_init`` output ([{"w": ..., "b": ...}, ...]); with
+    dyadic parameters and {0,1} inputs every product and partial sum is
+    exact in f32, so this matches the numpy chip bit-for-bit regardless
+    of dot-product association."""
+    h = jnp.asarray(x, jnp.float32)
+    for p in params:
+        h = h @ p["w"]
+        if "b" in p:
+            h = h + p["b"]
+    return h
+
+
 def make_mlp_probe_fn(defects: Optional[Sequence[ActivationDefects]] = None):
     """probe_fn(params, batch, probe) → [n_signs] MSE costs, for
     ``MGDConfig(fused=True)`` (see core.mgd.make_mgd_step)."""

@@ -1,0 +1,77 @@
+"""bench_trend: slow-drift detection over accumulated nightly artifacts.
+
+Synthetic histories only — no benchmarks run here.  The drifting metric
+moves a little each night (inside the per-run check_regression band) but
+walks out of the band across the window; the flat metric stays put; the
+ungated metric is reported informationally and never flagged.
+"""
+import json
+
+import pytest
+
+bench_trend = pytest.importorskip(
+    "bench_trend", reason="tools/ not on sys.path (see tests/conftest.py)")
+
+
+def _write_history(root, values_by_night):
+    """values_by_night: [{bench: {name: value}}] → one subdir per night."""
+    for i, metrics in enumerate(values_by_night):
+        d = root / f"2026-08-{i + 1:02d}_{100 + i}"
+        d.mkdir(parents=True)
+        for bench, names in metrics.items():
+            payload = {"rows": [{"bench": bench, "name": n, "value": v}
+                                for n, v in names.items()]}
+            (d / f"{bench}.json").write_text(json.dumps(payload))
+
+
+def _nights(n):
+    """ghat_variance_matched_k1 is gated at rel=0.75; drift +12%/night
+    stays inside the band per-step but compounds past it over n nights.
+    steps_per_s has no tolerance entry (machine-dependent, ungated)."""
+    return [{"farm_scaling": {
+        "ghat_variance_matched_k1": 1.0 * (1.12 ** i),
+        "nist7x7_k1_accuracy": 0.9,
+        "steps_per_s_thread_k1": 100.0 + i,
+    }} for i in range(n)]
+
+
+def test_slow_drift_flagged_flat_ok(tmp_path):
+    _write_history(tmp_path, _nights(8))
+    entries = bench_trend.load_history(tmp_path)
+    assert len(entries) == 8
+    lines, flagged = bench_trend.trend_report(entries, window=8)
+    statuses = {ln.split(",")[1]: ln.split(",")[-1]
+                for ln in lines[1:]}
+    assert statuses["ghat_variance_matched_k1"] == "DRIFT"
+    assert statuses["nist7x7_k1_accuracy"] == "ok"
+    assert statuses["steps_per_s_thread_k1"] == "info"
+    assert [f[1] for f in flagged] == ["ghat_variance_matched_k1"]
+
+
+def test_short_window_sees_no_drift(tmp_path):
+    # over 2 trailing nights the +12% step is inside the 75% band
+    _write_history(tmp_path, _nights(8))
+    entries = bench_trend.load_history(tmp_path)
+    _, flagged = bench_trend.trend_report(entries, window=2)
+    assert flagged == []
+
+
+def test_cli_informational_vs_strict(tmp_path, capsys):
+    _write_history(tmp_path, _nights(8))
+    out = tmp_path / "report" / "trend.csv"
+    assert bench_trend.main(["--history", str(tmp_path), "--window", "8",
+                             "--out", str(out)]) == 0
+    report = out.read_text()
+    assert "DRIFT" in report and report.startswith("bench,name,")
+    assert bench_trend.main(["--history", str(tmp_path), "--window", "8",
+                             "--strict"]) == 1
+    capsys.readouterr()
+
+
+def test_corrupt_artifact_skipped(tmp_path):
+    _write_history(tmp_path, _nights(3))
+    (tmp_path / "2026-08-02_101" / "broken.json").write_text("{not json")
+    entries = bench_trend.load_history(tmp_path)
+    assert len(entries) == 3
+    _, flagged = bench_trend.trend_report(entries, window=3)
+    assert flagged == []

@@ -133,10 +133,10 @@ def test_farm_close_tears_down_backend():
 
 def test_repo_tree_is_mgdlint_clean():
     """The full lint gate, as CI runs it: src/tests/benchmarks must be
-    clean against the committed baseline — and hardware/ must carry
-    ZERO baseline entries (its invariants deadlock training when
-    violated; they get fixed or waived-with-reason, never
-    grandfathered)."""
+    clean against the committed baseline — and hardware/ and
+    distributed/ must carry ZERO baseline entries (their invariants
+    deadlock training or silently retrace when violated; they get
+    fixed or waived-with-reason, never grandfathered)."""
     result = mgdlint.run_lint(
         [REPO / "src", REPO / "tests", REPO / "benchmarks"], REPO)
     assert not result.parse_errors, result.parse_errors
@@ -144,6 +144,8 @@ def test_repo_tree_is_mgdlint_clean():
     new, _, _ = mgdlint.split_baseline(result.findings, entries)
     assert not new, "new mgdlint findings:\n" + "\n".join(
         f.format() for f in new)
-    hw = [e for e in entries
-          if e["path"].startswith("src/repro/hardware/")]
-    assert not hw, f"hardware/ baseline entries are forbidden: {hw}"
+    clean_trees = ("src/repro/hardware/", "src/repro/distributed/")
+    frozen = [e for e in entries
+              if e["path"].startswith(clean_trees)]
+    assert not frozen, (
+        f"baseline entries under {clean_trees} are forbidden: {frozen}")

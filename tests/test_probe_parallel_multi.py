@@ -120,3 +120,257 @@ def test_k4_cost_drops_on_xor():
         p, s, aux = drv.step(p, s, _sharded_batch())
         costs.append(float(aux["cost"]))
     assert np.mean(costs[-30:]) < np.mean(costs[:30])
+
+
+# ---------------------------------------------------------------------------
+# Batch sharding: k-pod mesh ≡ k-chip farm, bit for bit
+# ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import mae  # noqa: E402
+from repro.hardware import ChipFarm, LinearLaneChip  # noqa: E402
+from repro.models.simple import linear_apply, make_mlp_probe_fn  # noqa: E402
+
+needs_8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs >= 8 devices — run with "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _l1_loss(p, b):
+    return mae(b["y"], linear_apply(p, b["x"]))
+
+
+def _dyadic_params():
+    # multiples of 1/4: with dtheta/eta = 1/2 and k = 4 every value the
+    # trajectory produces stays exactly representable in f32 for the
+    # horizon below (granularity shrinks ~4 bits/step from a 2^-2 start)
+    return [{"w": jnp.array([[0.5], [-0.25]], jnp.float32),
+             "b": jnp.array([0.25], jnp.float32)}]
+
+
+def _dyadic_batch():
+    # 8 rows = 4 contiguous 2-row shards; {0,1} inputs keep every product
+    # exact.  Mesh P("pod") blocks ≡ farm shard_chip_batch slices.
+    x = np.tile(np.array([[0, 0], [0, 1], [1, 0], [1, 1]], np.float32),
+                (2, 1))
+    y = np.tile(np.array([[0], [1], [1], [0]], np.float32), (2, 1))
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def _dyadic_cfg():
+    return repro.DriverConfig(dtheta=0.5, eta=0.5, mode="central", seed=5)
+
+
+@needs_pods
+def test_sharded_mesh_bit_matches_sharded_farm():
+    """THE bit-equality law under batch sharding: a 4-pod mesh whose pods
+    see P("pod") batch blocks walks the identical f32 trajectory to a
+    4-chip LinearLaneChip farm fed the same contiguous per-chip shards.
+    Dyadic data/params make every intermediate exact, so numpy-chip vs
+    XLA-mesh association differences cannot round."""
+    batch = _dyadic_batch()
+
+    drv = repro.driver("probe_parallel", _dyadic_cfg(), _l1_loss,
+                       mesh=_mesh4())
+    p_m = _dyadic_params()
+    s_m = drv.init(p_m)
+
+    farm = ChipFarm([LinearLaneChip() for _ in range(4)], shard_batch=True)
+    ext = repro.driver("probe_parallel_external", _dyadic_cfg(), plant=farm)
+    p_f = _dyadic_params()
+    s_f = ext.init(p_f)
+
+    for step in range(5):
+        p_m, s_m, aux_m = drv.step(p_m, s_m, batch)
+        p_f, s_f, aux_f = ext.step(p_f, s_f, batch)
+        np.testing.assert_array_equal(
+            np.asarray(aux_m["c_tilde"]), np.asarray(aux_f["c_tilde"]),
+            err_msg=f"c_tilde diverged at step {step}")
+        for a, b in zip(jax.tree_util.tree_leaves(p_m),
+                        jax.tree_util.tree_leaves(p_f)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"params diverged at step {step}")
+
+
+@needs_pods
+def test_sharded_resume_bit_exact():
+    """Stopping a batch-sharded run at step 3 and resuming through a
+    FRESH driver + FRESH farm (chips re-written from the checkpointed
+    params on the next probe) lands bit-identical to the straight run,
+    on both sides of the law."""
+    batch = _dyadic_batch()
+
+    def mesh_run(n, carry=None):
+        drv = repro.driver("probe_parallel", _dyadic_cfg(), _l1_loss,
+                           mesh=_mesh4())
+        p, s = carry if carry else (_dyadic_params(), None)
+        s = drv.init(p) if s is None else s
+        for _ in range(n):
+            p, s, _ = drv.step(p, s, batch)
+        return p, s
+
+    def farm_run(n, carry=None):
+        farm = ChipFarm([LinearLaneChip() for _ in range(4)],
+                        shard_batch=True)
+        ext = repro.driver("probe_parallel_external", _dyadic_cfg(),
+                          plant=farm)
+        p, s = carry if carry else (_dyadic_params(), None)
+        s = ext.init(p) if s is None else s
+        for _ in range(n):
+            p, s, _ = ext.step(p, s, batch)
+        return p, s
+
+    p_straight, _ = mesh_run(5)
+    p_resumed, _ = mesh_run(2, carry=mesh_run(3))
+    for a, b in zip(jax.tree_util.tree_leaves(p_straight),
+                    jax.tree_util.tree_leaves(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    f_straight, _ = farm_run(5)
+    f_resumed, _ = farm_run(2, carry=farm_run(3))
+    for a, b in zip(jax.tree_util.tree_leaves(f_straight),
+                    jax.tree_util.tree_leaves(f_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the two sides of the law still agree after resume
+    for a, b in zip(jax.tree_util.tree_leaves(p_resumed),
+                    jax.tree_util.tree_leaves(f_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Multi-axis meshes: model sharding + data sharding inside the pod step
+# ---------------------------------------------------------------------------
+
+
+@needs_8
+def test_multi_axis_model_sharded_params():
+    """(pod=4, model=2) mesh with w sharded over "model" via the logical
+    rules: the loss is shard-aware (psum over "model"), the step runs,
+    trains, and two fresh runs are bit-identical."""
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                ("pod", "model"))
+    xk = jax.random.PRNGKey(2)
+    x = jax.random.bernoulli(xk, 0.5, (8, 4)).astype(jnp.float32)
+    w_true = jnp.arange(16, dtype=jnp.float32).reshape(4, 4) / 8.0
+    y = x @ w_true
+    batch = {"x": x, "y": y}
+
+    def sharded_loss(p, b):
+        z = b["x"] @ p["w"]                       # local [B, 4/TP]
+        m = jax.lax.axis_index("model")
+        yloc = jax.lax.dynamic_slice_in_dim(
+            b["y"], m * z.shape[1], z.shape[1], 1)
+        err = (z - yloc) ** 2
+        return jax.lax.psum(jnp.sum(err), "model") / jnp.float32(
+            b["y"].shape[0] * b["y"].shape[1])
+
+    def run():
+        cfg = repro.DriverConfig(dtheta=1e-2, eta=0.3, mode="central",
+                                 seed=11)
+        drv = repro.driver("probe_parallel", cfg, sharded_loss, mesh=mesh,
+                           param_specs=[("w", ["model"])])
+        p = {"w": jnp.zeros((4, 4), jnp.float32)}
+        s = drv.init(p)
+        costs = []
+        for _ in range(60):
+            p, s, aux = drv.step(p, s, batch)
+            costs.append(float(aux["cost"]))
+        return p, costs
+
+    p_a, costs_a = run()
+    p_b, costs_b = run()
+    assert np.isfinite(costs_a).all()
+    assert np.mean(costs_a[-10:]) < np.mean(costs_a[:10])
+    np.testing.assert_array_equal(np.asarray(costs_a), np.asarray(costs_b))
+    np.testing.assert_array_equal(np.asarray(p_a["w"]), np.asarray(p_b["w"]))
+
+
+@needs_8
+def test_data_axis_pmean_agrees_with_pod_only():
+    """(pod=4, data=2) with data_axis="data": each pod's cost pair is the
+    pmean of its two data sub-shards.  Equal sub-shard sizes make that
+    the same mean up to association, so the trajectory tracks the
+    pod-only mesh run closely (not bitwise — a documented new mode)."""
+    batch = {"x": jnp.tile(X, (2, 1)), "y": jnp.tile(Y, (2, 1))}
+
+    def run(mesh, **kw):
+        cfg = repro.DriverConfig(dtheta=1e-2, eta=0.5, mode="central",
+                                 seed=4)
+        drv = repro.driver("probe_parallel", cfg, _loss, mesh=mesh, **kw)
+        p = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+        s = drv.init(p)
+        for _ in range(20):
+            p, s, aux = drv.step(p, s, batch)
+        return p, float(aux["cost"])
+
+    mesh2d = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                  ("pod", "data"))
+    p_2d, cost_2d = run(mesh2d, data_axis="data")
+    p_1d, cost_1d = run(_mesh4())
+    assert np.isfinite(cost_2d)
+    np.testing.assert_allclose(cost_2d, cost_1d, rtol=1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(p_2d),
+                    jax.tree_util.tree_leaves(p_1d)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+@needs_pods
+def test_fused_mesh_bit_matches_materializing():
+    """DriverConfig(fused=True) sends every pod through the Pallas
+    perturbed-forward kernels + mgd_update_window; the pinned coefficient
+    association keeps it bit-identical to the materializing mesh path."""
+    batch = _sharded_batch()
+
+    def run(fused):
+        cfg = repro.DriverConfig(dtheta=1e-2, eta=0.5, mode="central",
+                                 seed=3, fused=fused)
+        kw = {"probe_fn": make_mlp_probe_fn()} if fused else {}
+        drv = repro.driver("probe_parallel", cfg, _loss, mesh=_mesh4(),
+                           **kw)
+        p = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+        s = drv.init(p)
+        cs = []
+        for _ in range(4):
+            p, s, aux = drv.step(p, s, batch)
+            cs.append(np.asarray(aux["c_tilde"]))
+        return p, np.array(cs)
+
+    p_mat, ct_mat = run(False)
+    p_fus, ct_fus = run(True)
+    np.testing.assert_array_equal(ct_mat, ct_fus)
+    for a, b in zip(jax.tree_util.tree_leaves(p_mat),
+                    jax.tree_util.tree_leaves(p_fus)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs_pods
+def test_ghat_variance_falls_with_k():
+    """The scaling-laws acceptance axis: at frozen params with a
+    replicated batch (batch_specs=P()), the k-averaged estimator's
+    across-step variance falls ≈ 1/k — var(k=1)/var(k=4) lands near 4."""
+    from repro.api import replace_step
+
+    batch = {"x": X, "y": Y}
+    params = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
+
+    def variance(k, rounds=48):
+        cfg = repro.DriverConfig(dtheta=1e-2, eta=1.0, mode="central",
+                                 seed=0)
+        mesh = Mesh(np.array(jax.devices()[:k]).reshape(k), ("pod",))
+        drv = repro.driver("probe_parallel", cfg, _loss, mesh=mesh,
+                           batch_specs=P())
+        state = drv.init(params)
+        w0 = np.asarray(jax.tree_util.tree_leaves(params)[1])[0, 0]
+        samples = []
+        for t in range(rounds):
+            p1, _, _ = drv.step(params, replace_step(state, t), batch)
+            samples.append(
+                np.asarray(jax.tree_util.tree_leaves(p1)[1])[0, 0] - w0)
+        return float(np.var(samples))
+
+    ratio = variance(1) / variance(4)
+    assert 2.0 < ratio < 8.0, f"var(k=1)/var(k=4) = {ratio}"

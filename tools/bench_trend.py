@@ -1,0 +1,132 @@
+"""Trend tracking over accumulated nightly benchmark artifacts.
+
+``check_regression`` gates one fresh run against one committed baseline —
+it cannot see SLOW drift, where every nightly step stays inside its
+tolerance band but the sum walks out of it over weeks.  This tool reads a
+history directory of nightly artifact sets and reports, per (bench, name)
+metric, the value trajectory over time, flagging any metric whose change
+across the trailing window exceeds the same ``check_regression``
+tolerance band that gates single runs (band anchored at the window's
+first value).
+
+History layout (what the nightly workflow's cache step accumulates):
+
+    history/
+      2026-08-08_412/   farm_scaling.json  scaling_laws.json  ...
+      2026-08-09_413/   farm_scaling.json  ...
+
+one subdirectory per nightly run, lexically sorted = chronological when
+named ``<date>_<run>``.  Flat ``*.json`` files directly in the history
+dir are treated as a single entry (handy for ad-hoc local use).
+
+Informational by default (exit 0 even with drift, like the nightly
+regression report); ``--strict`` exits non-zero on any flagged metric.
+
+    python tools/bench_trend.py --history artifacts/bench-history \
+        --window 14 --out artifacts/bench-trend.csv
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+# runnable from any CWD: benchmarks/ lives next to tools/
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+from benchmarks.check_regression import _band, spec_for  # noqa: E402
+
+
+def load_history(history_dir):
+    """[(label, {bench: {name: value}})], chronological (lexical label
+    order).  Bad/empty JSON files are skipped with a warning — a corrupt
+    artifact must not kill the whole report."""
+    root = pathlib.Path(history_dir)
+    entries = []
+    subdirs = sorted(p for p in root.iterdir() if p.is_dir())
+    flat = sorted(root.glob("*.json"))
+    groups = ([(p.name, sorted(p.glob("*.json"))) for p in subdirs]
+              + ([(root.name, flat)] if flat else []))
+    for label, files in groups:
+        metrics = {}
+        for f in files:
+            try:
+                with open(f) as fh:
+                    rows = json.load(fh)["rows"]
+            except (json.JSONDecodeError, KeyError, OSError) as e:
+                print(f"bench_trend: skipping {f}: {e!r}", file=sys.stderr)
+                continue
+            bench = f.stem
+            metrics.setdefault(bench, {})
+            for r in rows:
+                metrics[bench][r["name"]] = float(r["value"])
+        if metrics:
+            entries.append((label, metrics))
+    return entries
+
+
+def trend_report(entries, window: int):
+    """(csv_lines, flagged): one line per (bench, name) present in the
+    latest entry, with the trailing-window drift verdict."""
+    lines = ["bench,name,points,window_first,latest,delta,status"]
+    flagged = []
+    if not entries:
+        return lines, flagged
+    latest_label, latest = entries[-1]
+    for bench in sorted(latest):
+        for name in sorted(latest[bench]):
+            series = [(label, m[bench][name]) for label, m in entries
+                      if bench in m and name in m[bench]]
+            tail = series[-max(2, window):]
+            first, last = tail[0][1], tail[-1][1]
+            spec = spec_for(bench, name)
+            if spec is None:
+                status = "info"          # ungated metric, reported only
+            elif len(tail) < 2:
+                status = "new"
+            else:
+                lo, hi = _band(spec, first)
+                status = "ok" if lo <= last <= hi else "DRIFT"
+            if status == "DRIFT":
+                flagged.append(
+                    (bench, name, first, last, tail[0][0], tail[-1][0]))
+            lines.append(f"{bench},{name},{len(series)},{first:.6g},"
+                         f"{last:.6g},{last - first:.6g},{status}")
+    return lines, flagged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", required=True,
+                    help="directory of per-run artifact subdirectories")
+    ap.add_argument("--window", type=int, default=14,
+                    help="trailing entries the drift check spans")
+    ap.add_argument("--out", default=None,
+                    help="write the CSV report here (default: stdout only)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any metric drifted")
+    args = ap.parse_args(argv)
+
+    entries = load_history(args.history)
+    lines, flagged = trend_report(entries, args.window)
+    report = "\n".join(lines) + "\n"
+    print(report, end="")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(report)
+    print(f"bench_trend: {len(entries)} runs, "
+          f"{len(flagged)} metrics drifted beyond tolerance over the "
+          f"trailing {args.window}", file=sys.stderr)
+    for bench, name, first, last, l0, l1 in flagged:
+        print(f"  DRIFT {bench}:{name}  {first:.6g} ({l0}) -> "
+              f"{last:.6g} ({l1})", file=sys.stderr)
+    return 1 if (args.strict and flagged) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

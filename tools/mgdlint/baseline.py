@@ -7,10 +7,11 @@ failure; anything else is NEW and fails the run.  Matching is multiset
 (two identical offending lines in one function need two entries), so a
 fix cannot hide behind a sibling's entry.
 
-Policy, enforced by review rather than code: ``src/repro/hardware/``
-must carry ZERO baseline entries — the host-boundary invariants are
-exactly the ones that deadlock or corrupt training when violated, so
-hardware findings get fixed or explicitly waived with a reason, never
+Policy, enforced by ``tests/test_hygiene.py``: ``src/repro/hardware/``
+and ``src/repro/distributed/`` must carry ZERO baseline entries — the
+host-boundary and sharding invariants are exactly the ones that
+deadlock, corrupt training or silently retrace when violated, so
+findings there get fixed or explicitly waived with a reason, never
 grandfathered.
 """
 from __future__ import annotations

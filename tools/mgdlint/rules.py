@@ -474,7 +474,8 @@ def build_step(cfg):
 
     def applies(self, rel: str) -> bool:
         return (rel.startswith("src/repro/core/")
-                or rel.startswith("src/repro/api/"))
+                or rel.startswith("src/repro/api/")
+                or rel.startswith("src/repro/distributed/"))
 
     def check(self, source: SourceFile) -> List[Finding]:
         findings = []
