@@ -52,6 +52,18 @@ TOLERANCES = [
     ("fault_tolerance", "hold_frac_retry_transient", dict(abs=0.0)),
     ("fault_tolerance", "hold_frac_*", dict(abs=0.05, direction="min")),
     ("fault_tolerance", "resume_bitexact", dict(abs=0.0)),
+    # online_serving — end-to-end serving tier: accuracy is measured from
+    # the service's responses, so batching/swap/alive-mask paths are all
+    # inside the gate.  Latency/QPS rows are machine-dependent and stay
+    # ungated.
+    ("online_serving", "driftfree_accuracy", dict(abs=0.10, direction="min")),
+    ("online_serving", "served_acc_online_trim_*",
+     dict(abs=0.10, direction="min")),
+    ("online_serving", "serve_trim_hold_frac",
+     dict(abs=0.04, direction="min")),
+    ("online_serving", "no_trim_collapsed", dict(abs=0.0)),
+    ("online_serving", "torn_swaps", dict(abs=0.0)),
+    ("online_serving", "resume_bitexact", dict(abs=0.0)),
     # farm_scaling — the 1/k law and farm convergence
     ("farm_scaling", "ghat_variance_*", dict(rel=0.75)),
     ("farm_scaling", "variance_ratio_*", dict(rel=0.5)),

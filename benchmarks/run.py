@@ -32,6 +32,7 @@ BENCHES = [
     "farm_scaling",
     "drift_aging",
     "fault_tolerance",
+    "online_serving",
     "roofline_report",
 ]
 

@@ -57,6 +57,9 @@ run python -m benchmarks.farm_scaling --backend process --smoke
 run python -m benchmarks.run --only drift_aging --smoke --seed 0 --out "$OUT"
 # fault tolerance: hangs/crashes/garbage masked, retried, quarantined
 run python -m benchmarks.run --only fault_tolerance --smoke --seed 0 --out "$OUT"
+# online serving: live-traffic inference with background MGD re-trim —
+# torn-swap + resume invariants gate at zero, drift accuracy gated
+run python -m benchmarks.run --only online_serving --smoke --seed 0 --out "$OUT"
 run python examples/chip_in_the_loop.py --chips 4 --steps 300 --eval-every 150
 run python examples/chip_in_the_loop.py --drift 0.02 --steps 200 --eval-every 100
 run python examples/chip_in_the_loop.py --chips 4 --fault-rate 0.1 --steps 200 --eval-every 100

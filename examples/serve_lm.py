@@ -1,46 +1,98 @@
-"""Batched serving example: prefill a ragged request batch, decode with the
-KV cache, stream greedy tokens.
+"""Online LM serving example: live requests through ``repro.serve``'s
+fixed-slot dispatcher, with optional background MGD re-trim from request
+feedback.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-7b
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-7b --trim
+
+Each "request" is a fixed-length token window; the service pads ragged
+client prompts into the window, batches concurrent requests into decode
+slots, and answers with next-token logits from one snapshot-consistent
+parameter version per batch.  With ``--trim``, labeled feedback flows
+into the replay buffer and a background MGD trimmer improves the served
+weights while traffic keeps flowing — no backprop, scalar cost only.
 
 Works with any non-stub assigned architecture at smoke scale — including
-the recurrent ones (rwkv6/zamba2), whose "KV cache" is an O(1) state.
+the recurrent ones (rwkv6/zamba2).
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
+from repro.api import DriverConfig
 from repro.configs import get_smoke_config
-from repro.models import model_init
-from repro.serving import serve_batch
+from repro.models import model_forward, model_init, model_loss
+from repro.serving import ServiceConfig, TrimConfig, serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--window", type=int, default=16,
+                    help="fixed decode-slot window (tokens)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--trim", action="store_true",
+                    help="background MGD re-trim from request feedback")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    params = model_init(cfg, jax.random.PRNGKey(0))
+    params = model_init(cfg, jax.random.PRNGKey(args.seed))
+    S = args.window
 
-    # a ragged batch of "requests"
-    key = jax.random.PRNGKey(1)
-    requests = [
-        jax.random.randint(jax.random.fold_in(key, i), (n,), 0, cfg.vocab)
-        for i, n in enumerate((5, 17, 9, 30))
+    def predict_fn(p, batch):
+        return model_forward(p, cfg, {"tokens": batch["tokens"]})[:, -1, :]
+
+    trim = None
+    if args.trim:
+        trim = TrimConfig(
+            DriverConfig(dtheta=1e-3, eta=2e-3, probes=4, mode="central",
+                         seed=args.seed),
+            lambda p, b: model_loss(p, cfg, b))
+
+    svc_cfg = ServiceConfig(slots=4, batch_window_s=0.002, min_fill=8,
+                            trim_batch=4, publish_every=10, seed=args.seed)
+
+    # ragged client prompts, padded caller-side into the fixed window
+    key = jax.random.PRNGKey(args.seed + 1)
+    rng = np.random.default_rng(args.seed + 2)
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                      (int(n),), 0, cfg.vocab))
+        for i, n in enumerate(rng.integers(5, S + 1, args.requests))
     ]
-    t0 = time.time()
-    out = serve_batch(params, cfg, requests, args.max_new)
-    dt = time.time() - t0
-    print(f"[serve] {cfg.name}: {len(requests)} requests × "
-          f"{args.max_new} new tokens in {dt:.2f}s "
-          f"({len(requests) * args.max_new / dt:.1f} tok/s)")
-    for i, row in enumerate(out):
-        print(f"  req{i} ({len(requests[i])} prompt toks) →",
-              row[:10].tolist(), "...")
+
+    with serve(svc_cfg, predict_fn, params, trim=trim, start=False) as svc:
+        t0 = time.time()
+        futs = []
+        for i, p in enumerate(prompts):
+            window = np.zeros(S, p.dtype)
+            window[-len(p):] = p[-S:]           # left-pad into the slot
+            feedback = {"labels": np.roll(window, -1)} if args.trim else None
+            futs.append(svc.submit({"tokens": window}, feedback=feedback))
+        results = [f.result(120) for f in futs]
+        if args.trim:                           # let the trainer catch up
+            deadline = time.time() + 60
+            while (svc.stats()["trim_global_step"] < 16
+                   and time.time() < deadline):
+                time.sleep(0.02)
+        svc.fence()
+        stats = svc.stats()
+        dt = time.time() - t0
+
+    print(f"[serve] {cfg.name}: {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / dt:.1f} req/s), "
+          f"p50={stats['latency_p50_ms']:.2f}ms "
+          f"p99={stats['latency_p99_ms']:.2f}ms, "
+          f"param version {stats['version']}"
+          + (f", {stats['trim_global_step']} trim steps" if args.trim else ""))
+    for i in (0, 1, 2):
+        r = results[i]
+        top = np.argsort(np.asarray(r.output))[-3:][::-1]
+        print(f"  req{i} ({len(prompts[i])} prompt toks, v{r.version}) "
+              f"top-3 next tokens -> {top.tolist()}")
 
 
 if __name__ == "__main__":

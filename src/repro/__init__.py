@@ -1,6 +1,6 @@
 """repro — multiplexed gradient descent, reproduced and scaled.
 
-The package front door is the driver registry:
+The package front door is three verbs:
 
     import repro
     mgd = repro.driver("discrete", repro.DriverConfig(dtheta=1e-2, eta=1.0),
@@ -8,12 +8,21 @@ The package front door is the driver registry:
     state = mgd.init(params)
     params, state, aux = mgd.step(params, state, batch)
 
+    result = repro.train(loss_fn, params, cfg, sample_fn, num_steps,
+                         loop=repro.TrainLoopConfig(chunk=100))
+
+    svc = repro.serve(repro.ServiceConfig(slots=8), predict_fn, params,
+                      trim=repro.TrimConfig(cfg, loss_fn, plant=farm))
+
 Attributes resolve lazily so ``import repro`` stays free of jax imports
 until the API is actually used (subpackages import directly as before).
 """
 _API_NAMES = (
     "ALGORITHMS", "DriverConfig", "MGDDriver", "ProbeParallelState",
     "driver", "make_epoch", "register_driver", "replace_step", "state_step",
+    # consolidated front door (lazy: train pulls the loop, serve the tier)
+    "train", "train_mgd", "TrainLoopConfig", "TrainResult",
+    "serve", "OnlineService", "ServiceConfig", "TrimConfig",
 )
 
 __all__ = list(_API_NAMES)

@@ -1,10 +1,50 @@
-"""Public driver API — ``repro.driver()`` and the uniform MGD contract."""
+"""Public API — the consolidated front door.
+
+Three verbs cover the repo's workloads:
+
+* ``repro.driver(algorithm, cfg, loss_fn, ...)`` — build an
+  ``(init, step)`` MGD driver from the registry.
+* ``repro.train(loss_fn, params, cfg, sample_fn, num_steps,
+  loop=TrainLoopConfig(...))`` — run the offline training loop.
+* ``repro.serve(cfg, predict_fn, params, trim=TrimConfig(...))`` — run
+  the online serving tier with background MGD re-trim.
+
+``train``/``serve`` (and their config dataclasses) resolve lazily so
+that importing the driver surface alone does not pull in the training
+loop or the serving stack.
+"""
 from .driver import (ALGORITHMS, DriverConfig, MGDDriver, ProbeParallelState,
                      as_analog_config, as_mgd_config, driver, make_epoch,
                      register_driver, replace_step, state_step)
+
+_LAZY = {
+    # offline loop
+    "train": ("repro.training.train_loop", "train_mgd"),
+    "train_mgd": ("repro.training.train_loop", "train_mgd"),
+    "TrainLoopConfig": ("repro.training.train_loop", "TrainLoopConfig"),
+    "TrainResult": ("repro.training.train_loop", "TrainResult"),
+    # online serving tier
+    "serve": ("repro.serving.online", "serve"),
+    "OnlineService": ("repro.serving.online", "OnlineService"),
+    "ServiceConfig": ("repro.serving.online", "ServiceConfig"),
+    "TrimConfig": ("repro.serving.online", "TrimConfig"),
+}
 
 __all__ = [
     "ALGORITHMS", "DriverConfig", "MGDDriver", "ProbeParallelState",
     "as_analog_config", "as_mgd_config", "driver", "make_epoch",
     "register_driver", "replace_step", "state_step",
-]
+] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -235,14 +235,15 @@ def replace_step(state, step):
 _WARNED: set = set()
 
 
-def warn_deprecated(name: str, replacement: str) -> None:
-    """Single-fire DeprecationWarning per legacy entry point."""
+def warn_deprecated(name: str, replacement: str, *,
+                    category=DeprecationWarning) -> None:
+    """Single-fire deprecation warning per legacy entry point."""
     if name in _WARNED:
         return
     _WARNED.add(name)
     warnings.warn(
-        f"{name} is deprecated; build the algorithm through the registry "
-        f"instead: {replacement}", DeprecationWarning, stacklevel=3)
+        f"{name} is deprecated; use the consolidated surface instead: "
+        f"{replacement}", category, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------

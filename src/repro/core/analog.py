@@ -1,7 +1,7 @@
 """Continuous-time MGD — the paper's Algorithm 2 (analog hardware).
 
 Construct through the registry: ``repro.driver("analog", cfg, loss_fn)``
-(``make_analog_step`` remains as a deprecated shim).
+(the retired ``make_analog_step`` shim now raises).
 
 Discretized with timestep ``dt``:
 
@@ -50,7 +50,7 @@ class AnalogMGDConfig:
     dt: float = 1.0
     seed: int = 0
     # σ_C of the implicit device (builds a hardware.NoisyPlant); must stay
-    # 0 when an explicit plant is passed to make_analog_step.
+    # 0 when an explicit plant is passed to build_analog_step.
     cost_noise: float = 0.0
 
 
@@ -129,20 +129,10 @@ def build_analog_step(
     return step_fn
 
 
-def make_analog_step(
-    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
-    cfg: AnalogMGDConfig,
-    total_params: Optional[int] = None,
-    *,
-    plant=None,
-):
-    """Deprecated: use ``repro.driver("analog", cfg, loss_fn, ...)``.
-
-    Delegates to the registry; trajectory-preserving (bit-identical f32),
-    with the standardized ``grad_norm_proxy`` aux key added.
-    """
-    from repro.api.driver import driver, warn_deprecated
-    warn_deprecated("make_analog_step",
-                    "repro.driver('analog', cfg, loss_fn, ...).step")
-    return driver("analog", cfg, loss_fn, total_params=total_params,
-                  plant=plant).step
+def make_analog_step(*args, **kwargs):
+    """RETIRED (PR 3 deprecation shim, removed PR 10)."""
+    raise RuntimeError(
+        "make_analog_step was retired; build the algorithm through the "
+        "registry: repro.driver('analog', cfg, loss_fn, ...).step "
+        "(bit-identical f32 trajectory, plus the standardized "
+        "grad_norm_proxy aux key)")

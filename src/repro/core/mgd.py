@@ -9,10 +9,10 @@ Construct this algorithm through the driver registry::
 
 ``repro.driver`` (see ``repro.api.driver``) builds the discrete,
 continuous, and probe-parallel algorithms behind one optax-style
-``(init, step)`` contract; the legacy ``make_mgd_step`` entry point
-remains as a deprecated shim that delegates to the registry.  This
-module keeps the discrete algorithm's implementation: ``MGDConfig``,
-``MGDState``, ``mgd_init``, and the step factory ``build_mgd_step``.
+``(init, step)`` contract (the retired ``make_mgd_step`` shim now
+raises).  This module keeps the discrete algorithm's implementation:
+``MGDConfig``, ``MGDState``, ``mgd_init``, and the step factory
+``build_mgd_step``.
 
 The MGD step is *model-free*: it consumes only a scalar cost oracle — a
 ``repro.hardware.Plant`` (ideal, noisy, quantized, or an external chip),
@@ -97,7 +97,7 @@ class MGDConfig:
     seed: int = 0
     # hardware noise emulation (paper §3.5).  These fields describe the
     # IMPLICIT device (they build a hardware.NoisyPlant internally); when
-    # an explicit plant is passed to make_mgd_step they must stay 0 — the
+    # an explicit plant is passed to build_mgd_step they must stay 0 — the
     # plant owns all imperfections.
     cost_noise: float = 0.0       # σ_C  — gaussian noise added to every cost read
     update_noise: float = 0.0     # σ_θ  — update noise, std σ_θ·Δθ (see hardware.plants)
@@ -214,7 +214,7 @@ def _resolve_plant(loss_fn, cfg, *, probe_fn=None, plant=None):
             "set the config fields to 0")
     if probe_fn is not None and plant.probe_fn is not probe_fn:
         if plant.probe_fn is not None:
-            raise ValueError("both the plant and make_mgd_step were given "
+            raise ValueError("both the plant and build_mgd_step were given "
                              "a probe_fn — they disagree; set it in one "
                              "place")
         # shallow copy so a plant shared across optimizers never inherits
@@ -606,25 +606,13 @@ def build_mgd_step(
 # ---------------------------------------------------------------------------
 
 
-def make_mgd_step(
-    loss_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]],
-    cfg: MGDConfig,
-    total_params: Optional[int] = None,
-    *,
-    probe_fn: Optional[Callable] = None,
-    plant=None,
-):
-    """Deprecated: use ``repro.driver("discrete", cfg, loss_fn, ...)``.
-
-    Delegates to the registry; the returned step is trajectory-preserving
-    (bit-identical f32 parameters/C̃) and additionally reports the
-    standardized ``grad_norm_proxy`` aux key.
-    """
-    from repro.api.driver import driver, warn_deprecated
-    warn_deprecated("make_mgd_step",
-                    "repro.driver('discrete', cfg, loss_fn, ...).step")
-    return driver("discrete", cfg, loss_fn, total_params=total_params,
-                  probe_fn=probe_fn, plant=plant).step
+def make_mgd_step(*args, **kwargs):
+    """RETIRED (PR 3 deprecation shim, removed PR 10)."""
+    raise RuntimeError(
+        "make_mgd_step was retired; build the algorithm through the "
+        "registry: repro.driver('discrete', cfg, loss_fn, ...).step "
+        "(bit-identical f32 trajectory, plus the standardized "
+        "grad_norm_proxy aux key)")
 
 
 # ---------------------------------------------------------------------------

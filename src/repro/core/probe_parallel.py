@@ -455,27 +455,10 @@ def build_probe_parallel_external_step(
     return step_fn
 
 
-def make_probe_parallel_step(
-    loss_fn: Callable,
-    cfg: MGDConfig,
-    mesh,
-    *,
-    probe_axis: str = "pod",
-    param_specs=None,
-    batch_specs=None,
-    plant=None,
-):
-    """Deprecated: use ``repro.driver("probe_parallel", cfg, loss_fn,
-    mesh=mesh)``.
-
-    Returns the RAW ``step_fn(params, step, batch) → (params, metrics)``
-    (the registry wraps the same step behind the uniform
-    ``(params, state, batch)`` contract).
-    """
-    from repro.api.driver import warn_deprecated
-    warn_deprecated(
-        "make_probe_parallel_step",
-        "repro.driver('probe_parallel', cfg, loss_fn, mesh=mesh).step")
-    return build_probe_parallel_step(
-        loss_fn, cfg, mesh, probe_axis=probe_axis, param_specs=param_specs,
-        batch_specs=batch_specs, plant=plant)
+def make_probe_parallel_step(*args, **kwargs):
+    """RETIRED (PR 3 deprecation shim, removed PR 10)."""
+    raise RuntimeError(
+        "make_probe_parallel_step was retired; build the algorithm through "
+        "the registry: repro.driver('probe_parallel', cfg, loss_fn, "
+        "mesh=mesh).step — or build_probe_parallel_step for the raw "
+        "(params, step, batch) contract")

@@ -37,7 +37,7 @@ Ordered callbacks sequence the host I/O with program order but are not
 allowed inside ``lax.cond`` branches, so external plants run the one
 cond-free MGD step: ``MGDConfig(mode="central", tau_theta=1)`` without
 replay (forward mode's C₀ refresh and every windowed update are conds);
-``make_mgd_step`` enforces this.  Temporal integration windows belong in
+``build_mgd_step`` enforces this.  Temporal integration windows belong in
 the host loop driving the chip, not inside the traced step.
 
 Host devices must be NUMPY-PURE: a callback that dispatches JAX ops can
@@ -172,6 +172,14 @@ class ExternalPlant(Plant):
         a no-op for policy-free plants, which own no threads."""
         if self._attempt_pool is not None:
             self._finalizer()
+
+    def fence(self, timeout=None) -> None:
+        """Drain in-flight work — part of the uniform lifecycle contract
+        (``ChipFarm``/``OnlineService`` share it).  ExternalPlant issues
+        every device transaction synchronously inside the ordered
+        ``io_callback``, so there is never anything in flight: a no-op
+        that exists so callers can fence any plant before a parameter
+        swap or checkpoint without type-sniffing."""
 
     def __enter__(self) -> "ExternalPlant":
         return self

@@ -18,7 +18,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import MGDConfig
 from repro.data.pipeline import lm_sampler
 from repro.models import model_init, model_loss
-from repro.training.train_loop import train_backprop, train_mgd
+from repro.training.train_loop import (TrainLoopConfig, train_backprop,
+                                       train_mgd)
 
 
 def main():
@@ -59,8 +60,9 @@ def main():
             tau_theta=args.tau_theta, tau_x=args.tau_x, mode=args.mode,
             probes=args.probes, seed=args.seed)
         res = train_mgd(loss_fn, params, mgd_cfg, sample_fn, args.steps,
-                        chunk=args.chunk, checkpoint_dir=args.ckpt_dir,
-                        checkpoint_every=args.ckpt_every)
+                        loop=TrainLoopConfig(
+                            chunk=args.chunk, checkpoint_dir=args.ckpt_dir,
+                            checkpoint_every=args.ckpt_every))
     else:
         eta = args.eta if args.eta is not None else 0.3
         res = train_backprop(loss_fn, params, sample_fn, args.steps,

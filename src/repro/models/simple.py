@@ -83,7 +83,7 @@ def linear_apply(params, x):
 
 def make_mlp_probe_fn(defects: Optional[Sequence[ActivationDefects]] = None):
     """probe_fn(params, batch, probe) → [n_signs] MSE costs, for
-    ``MGDConfig(fused=True)`` (see core.mgd.make_mgd_step)."""
+    ``MGDConfig(fused=True)`` (see core.mgd.build_mgd_step)."""
 
     def probe_fn(params, batch, probe):
         outs = mlp_apply_perturbed(params, batch["x"], probe, defects)

@@ -485,7 +485,7 @@ def model_probe_costs(params, cfg: ArchConfig, batch, probe):
 
 
 def make_transformer_probe_fn(cfg: ArchConfig):
-    """Bind ``cfg`` → probe_fn(params, batch, probe) for make_mgd_step."""
+    """Bind ``cfg`` → probe_fn(params, batch, probe) for build_mgd_step."""
 
     def probe_fn(params, batch, probe):
         return model_probe_costs(params, cfg, batch, probe)

@@ -1,2 +1,13 @@
-"""Serving substrate: batched prefill + decode loops with KV/SSM caches."""
+"""Serving substrate: batched prefill + decode loops with KV/SSM caches,
+plus the online-learning service (inference under live traffic with
+background MGD re-trim)."""
 from .decode import serve_batch, greedy_generate
+from .online import (OnlineService, OnlineTrimmer, ParamSnapshot, ParamStore,
+                     ReplayBuffer, ServeResult, ServiceConfig, TrimConfig,
+                     serve)
+
+__all__ = [
+    "serve_batch", "greedy_generate", "OnlineService", "OnlineTrimmer",
+    "ParamSnapshot", "ParamStore", "ReplayBuffer", "ServeResult",
+    "ServiceConfig", "TrimConfig", "serve",
+]

@@ -1,2 +1,10 @@
 """Training substrate: MGD/backprop loops, checkpointing, fault tolerance."""
 from . import checkpoint, train_loop
+from .train_loop import (TrainLoopConfig, TrainResult, classification_accuracy,
+                         resolve_driver, train_backprop, train_mgd)
+
+__all__ = [
+    "checkpoint", "train_loop", "TrainLoopConfig", "TrainResult",
+    "classification_accuracy", "resolve_driver", "train_backprop",
+    "train_mgd",
+]

@@ -26,7 +26,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.api.driver import MGDDriver, driver as build_driver, state_step
+from repro.api.driver import (MGDDriver, driver as build_driver, state_step,
+                              warn_deprecated)
 from repro.core import MGDState
 from repro.optim import sgd_init, sgd_step
 from . import checkpoint as ckpt
@@ -40,8 +41,47 @@ class TrainResult:
     steps_done: int
 
 
-def _as_driver(loss_fn, cfg, *, probe_fn=None, plant=None, mesh=None,
-               algorithm: Optional[str] = None) -> MGDDriver:
+@dataclasses.dataclass
+class TrainLoopConfig:
+    """Every loop-level knob of ``train_mgd``, in one place.
+
+    ``train_mgd`` historically grew a dozen keyword arguments (chunking,
+    eval cadence, checkpointing, resume, recalibration, device plumbing);
+    this dataclass is the consolidated surface —
+
+        repro.train(loss_fn, params, cfg, sample_fn, steps,
+                    loop=TrainLoopConfig(chunk=50, checkpoint_dir=d,
+                                         checkpoint_every=100))
+
+    The flat keyword spelling is still accepted (it builds this config
+    internally, so the two paths are the SAME code — f32-bit-identical
+    trajectories, pinned in tests/test_online_serving.py) but emits a
+    single-fire ``PendingDeprecationWarning``.
+    """
+
+    algorithm: Optional[str] = None    # registry name for a DriverConfig
+    chunk: int = 100                   # steps per device program
+    eval_fn: Optional[Callable] = None     # eval_fn(params) -> dict
+    eval_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume: bool = True
+    log: Optional[Callable] = print
+    probe_fn: Optional[Callable] = None    # fused probe path (cfg.fused)
+    plant: Any = None                  # hardware.Plant (None → implicit)
+    mesh: Any = None                   # probe-parallel probe mesh
+    recal_every: int = 0               # scheduled full-rewrite period
+    recal_params: Any = None           # shadow params (None → initial)
+
+    def replace(self, **kw) -> "TrainLoopConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_LOOP_FIELDS = tuple(f.name for f in dataclasses.fields(TrainLoopConfig))
+
+
+def resolve_driver(loss_fn, cfg, *, probe_fn=None, plant=None, mesh=None,
+                   algorithm: Optional[str] = None) -> MGDDriver:
     """Resolve ``cfg`` to an ``MGDDriver``: pass one through, or build it
     from a config (legacy configs pick their algorithm; ``DriverConfig``
     defaults to discrete unless ``algorithm`` says otherwise)."""
@@ -58,6 +98,10 @@ def _as_driver(loss_fn, cfg, *, probe_fn=None, plant=None, mesh=None,
             else "discrete"
     return build_driver(algorithm, cfg, loss_fn, probe_fn=probe_fn,
                         plant=plant, mesh=mesh)
+
+
+# the historical private name, kept for callers inside the repo's history
+_as_driver = resolve_driver
 
 
 def _ckpt_tree(params, state):
@@ -130,41 +174,64 @@ def train_mgd(
     sample_fn: Callable,          # sample_fn(sample_index) -> batch
     num_steps: int,
     *,
-    algorithm: Optional[str] = None,   # registry name for a DriverConfig
-    chunk: int = 100,
-    eval_fn: Optional[Callable] = None,    # eval_fn(params) -> dict
-    eval_every: int = 0,
-    checkpoint_dir: Optional[str] = None,
-    checkpoint_every: int = 0,
-    resume: bool = True,
-    log: Optional[Callable] = print,
-    probe_fn: Optional[Callable] = None,   # fused probe path (cfg.fused)
-    plant=None,                   # hardware.Plant device (None → implicit)
-    mesh=None,                    # probe-parallel probe mesh
-    recal_every: int = 0,         # scheduled full-rewrite period (0 = off)
-    recal_params=None,            # shadow params to rewrite (None → initial)
+    loop: Optional[TrainLoopConfig] = None,
+    **flat,                       # legacy flat spelling of TrainLoopConfig
 ) -> TrainResult:
     """Run any MGD driver for ``num_steps`` iterations (τ_p ticks).
 
-    ``recal_every`` turns on scheduled recalibration — the lab-bench
-    mitigation for drifting/aging devices that MGD's online feedback is
-    measured against (``benchmarks/drift_aging.py``): every
+    Loop-level knobs (chunking, eval cadence, checkpoint/resume,
+    scheduled recalibration, device plumbing) live in ``loop=``, a
+    ``TrainLoopConfig``.  The historical flat keywords (``chunk=``,
+    ``eval_fn=``, ``checkpoint_dir=``, ``plant=``, ...) are still
+    accepted — they build the same config, so the flat and ``loop=``
+    paths are f32-bit-identical — but the flat spelling emits a
+    single-fire ``PendingDeprecationWarning``; new code should pass
+    ``loop=TrainLoopConfig(...)`` (or call ``repro.train``).
+
+    ``loop.recal_every`` turns on scheduled recalibration — the
+    lab-bench mitigation for drifting/aging devices that MGD's online
+    feedback is measured against (``benchmarks/drift_aging.py``): every
     ``recal_every`` completed steps the loop rewrites the device from the
     trainer's shadow parameters (``recal_params``, defaulting to the
     initial ``params`` — the last full calibration) through the plant's
     write path.  Boundaries are a pure function of the global step, so
     checkpoint/resume replays the identical recalibration schedule.
     """
-    if recal_every < 0:
-        raise ValueError(f"recal_every must be >= 0, got {recal_every}")
+    if flat:
+        unknown = sorted(set(flat) - set(_LOOP_FIELDS))
+        if unknown:
+            raise TypeError(f"train_mgd got unexpected keyword arguments "
+                            f"{unknown}; loop-level knobs are the fields "
+                            f"of TrainLoopConfig: {sorted(_LOOP_FIELDS)}")
+        if loop is not None:
+            raise ValueError(
+                f"got loop=TrainLoopConfig(...) AND the flat keywords "
+                f"{sorted(flat)} — set every loop knob in one place")
+        warn_deprecated(
+            "train_mgd's flat loop keywords",
+            "train_mgd(..., loop=TrainLoopConfig(...))",
+            category=PendingDeprecationWarning)
+        loop = TrainLoopConfig(**flat)
+    elif loop is None:
+        loop = TrainLoopConfig()
+    if loop.recal_every < 0:
+        raise ValueError(
+            f"recal_every must be >= 0, got {loop.recal_every}")
+    (chunk, eval_fn, eval_every, checkpoint_dir, checkpoint_every, log,
+     recal_every, recal_params) = (
+        loop.chunk, loop.eval_fn, loop.eval_every, loop.checkpoint_dir,
+        loop.checkpoint_every, loop.log, loop.recal_every,
+        loop.recal_params)
     # shadow captured from the caller's arguments BEFORE any resume
     # restore — the factory calibration, identical across restarts
     shadow = recal_params if recal_params is not None else params
-    drv = _as_driver(loss_fn, cfg, probe_fn=probe_fn, plant=plant,
-                     mesh=mesh, algorithm=algorithm)
+    drv = resolve_driver(loss_fn, cfg, probe_fn=loop.probe_fn,
+                         plant=loop.plant, mesh=loop.mesh,
+                         algorithm=loop.algorithm)
     state = drv.init(params)
     start_step = 0
-    if checkpoint_dir and resume and ckpt.latest_step(checkpoint_dir) is not None:
+    if checkpoint_dir and loop.resume \
+            and ckpt.latest_step(checkpoint_dir) is not None:
         params, state, start_step = _restore_any(
             checkpoint_dir, params, state, log)
         if log:

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init, mse
+from repro.core import MGDConfig, build_mgd_step, mgd_init, mse
 from repro.data import tasks
 from repro.models.simple import mlp_apply, mlp_init
 from repro.training import checkpoint as ckpt
@@ -37,7 +37,7 @@ def test_deterministic_resume(tmp_path):
     batch = {"x": x, "y": y}
     loss_fn = lambda p, b: mse(mlp_apply(p, b["x"]), b["y"])   # noqa: E731
     cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=9)
-    step_fn = jax.jit(make_mgd_step(loss_fn, cfg))
+    step_fn = jax.jit(build_mgd_step(loss_fn, cfg))
     p0 = mlp_init(jax.random.PRNGKey(3), (2, 2, 1))
 
     # continuous run

@@ -77,14 +77,14 @@ def test_probe_parallel_converges():
         from repro.distributed.compat import make_mesh
         mesh = make_mesh((2, 2), ("pod", "data"))
         from repro.core.mgd import MGDConfig
-        from repro.core.probe_parallel import make_probe_parallel_step
+        from repro.core.probe_parallel import build_probe_parallel_step
         target = jnp.array([1.0, -2.0, 3.0, 0.5])
         def loss(p, batch):
             pred = batch["x"] @ p["w"]
             return jnp.mean((pred - batch["x"] @ target)**2)
         params = {"w": jnp.zeros(4)}
         cfg = MGDConfig(mode="central", dtheta=1e-3, eta=0.1)
-        step_fn = make_probe_parallel_step(loss, cfg, mesh)
+        step_fn = build_probe_parallel_step(loss, cfg, mesh)
         key = jax.random.PRNGKey(0)
         p = params
         for i in range(2000):
@@ -127,7 +127,7 @@ def test_sharded_mgd_step_runs_on_mesh():
         from repro.distributed.compat import make_mesh
         mesh = make_mesh((2, 4), ("data", "model"))
         from repro.configs import get_smoke_config
-        from repro.core import MGDConfig, make_mgd_step, mgd_init
+        from repro.core import MGDConfig, build_mgd_step, mgd_init
         from repro.distributed import sharding as shd
         from repro.launch import specs
         from repro.models import model_init, model_loss
@@ -139,7 +139,7 @@ def test_sharded_mgd_step_runs_on_mesh():
             shardings = specs.param_shardings(cfg, mesh)
             params = jax.device_put(params, shardings)
             loss_fn = lambda p, b: model_loss(p, cfg, b)
-            step = jax.jit(make_mgd_step(loss_fn, mgd_cfg))
+            step = jax.jit(build_mgd_step(loss_fn, mgd_cfg))
             state = mgd_init(params, mgd_cfg)
             toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
                                       cfg.vocab)

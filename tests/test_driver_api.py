@@ -5,17 +5,15 @@ Load-bearing contracts:
 * ``repro.driver(name, cfg, loss_fn, ...)`` constructs all three
   algorithms behind the uniform ``(init, step)`` pair with standardized
   ``aux`` (cost / c_tilde / grad_norm_proxy).
-* Registry-built drivers are bit-identical (f32) to the legacy
-  ``make_*_step`` entry points — discrete (incl. fused + explicit
+* Registry-built drivers are bit-identical (f32) to the raw
+  ``build_*_step`` constructors — discrete (incl. fused + explicit
   NoisyPlant), analog, and probe-parallel.
 * ``train_mgd`` drives ANY driver, checkpoints the full state pytree
   generically, and resumes Algorithm 2 onto the uninterrupted
   trajectory through a ``QuantizedPlant(write_tau=...)``.
-* Legacy shims fire a single DeprecationWarning; ambiguous config mixes
-  are rejected with actionable errors.
+* The retired PR 3 shims (``make_*_step``) raise with the registry
+  one-liner; ambiguous config mixes are rejected with actionable errors.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,7 +22,7 @@ import pytest
 import repro
 from repro.api import DriverConfig, MGDDriver, driver, make_epoch, state_step
 from repro.core import (AnalogMGDConfig, MGDConfig, analog_init,
-                        make_analog_step, make_mgd_step, mgd_init, mse)
+                        build_analog_step, build_mgd_step, mgd_init, mse)
 from repro.data import tasks
 from repro.hardware import IdealPlant, NoisyPlant, QuantizedPlant
 from repro.models.simple import make_mlp_probe_fn, mlp_apply, mlp_init
@@ -39,13 +37,6 @@ def _loss(p, b):
 
 def _params(seed=0):
     return mlp_init(jax.random.PRNGKey(seed), (2, 2, 1))
-
-
-def _legacy(fn, *args, **kw):
-    """Call a deprecated entry point with its warning silenced."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return fn(*args, **kw)
 
 
 def _rollout(step_fn, params, state, steps=24):
@@ -79,10 +70,10 @@ DISCRETE_CFGS = [
 
 @pytest.mark.parametrize("cfg", DISCRETE_CFGS,
                          ids=["forward", "central", "replay", "momentum"])
-def test_discrete_driver_matches_legacy(cfg):
+def test_discrete_driver_matches_raw_build(cfg):
     p0 = _params()
-    legacy_step = _legacy(make_mgd_step, _loss, cfg)
-    p_a, s_a, ct_a = _rollout(legacy_step, p0, mgd_init(p0, cfg))
+    raw_step = build_mgd_step(_loss, cfg)
+    p_a, s_a, ct_a = _rollout(raw_step, p0, mgd_init(p0, cfg))
 
     drv = repro.driver("discrete", cfg, _loss)
     p_b, s_b, ct_b = _rollout(drv.step, p0, drv.init(p0))
@@ -91,13 +82,13 @@ def test_discrete_driver_matches_legacy(cfg):
     _assert_trees_equal(s_a, s_b)
 
 
-def test_discrete_fused_driver_matches_legacy():
+def test_discrete_fused_driver_matches_raw_build():
     cfg = MGDConfig(dtheta=1e-2, eta=0.5, mode="central", fused=True,
                     kernel_impl="interpret", seed=2)
     probe_fn = make_mlp_probe_fn()
     p0 = _params()
-    legacy_step = _legacy(make_mgd_step, _loss, cfg, probe_fn=probe_fn)
-    p_a, _, ct_a = _rollout(legacy_step, p0, mgd_init(p0, cfg))
+    raw_step = build_mgd_step(_loss, cfg, probe_fn=probe_fn)
+    p_a, _, ct_a = _rollout(raw_step, p0, mgd_init(p0, cfg))
 
     drv = driver("discrete", cfg, _loss, probe_fn=probe_fn)
     p_b, _, ct_b = _rollout(drv.step, p0, drv.init(p0))
@@ -105,13 +96,13 @@ def test_discrete_fused_driver_matches_legacy():
     _assert_trees_equal(p_a, p_b)
 
 
-def test_discrete_noisy_plant_driver_matches_legacy():
+def test_discrete_noisy_plant_driver_matches_raw_build():
     cfg = MGDConfig(dtheta=1e-2, eta=1.0, seed=5)
     plant = NoisyPlant(_loss, cost_noise=1e-3, write_noise=0.01,
                        dtheta=1e-2, seed=5)
     p0 = _params()
-    legacy_step = _legacy(make_mgd_step, None, cfg, plant=plant)
-    p_a, _, ct_a = _rollout(legacy_step, p0, mgd_init(p0, cfg))
+    raw_step = build_mgd_step(None, cfg, plant=plant)
+    p_a, _, ct_a = _rollout(raw_step, p0, mgd_init(p0, cfg))
 
     drv = driver("discrete", cfg, plant=plant)
     p_b, _, ct_b = _rollout(drv.step, p0, drv.init(p0))
@@ -119,11 +110,11 @@ def test_discrete_noisy_plant_driver_matches_legacy():
     _assert_trees_equal(p_a, p_b)
 
 
-def test_analog_driver_matches_legacy():
+def test_analog_driver_matches_raw_build():
     cfg = AnalogMGDConfig(dtheta=1e-2, eta=1e-3)
     p0 = _params()
-    legacy_step = _legacy(make_analog_step, _loss, cfg)
-    p_a, s_a, ct_a = _rollout(legacy_step, p0, analog_init(p0, cfg), 50)
+    raw_step = build_analog_step(_loss, cfg)
+    p_a, s_a, ct_a = _rollout(raw_step, p0, analog_init(p0, cfg), 50)
 
     drv = repro.driver("analog", cfg, _loss)
     p_b, s_b, ct_b = _rollout(drv.step, p0, drv.init(p0), 50)
@@ -132,15 +123,15 @@ def test_analog_driver_matches_legacy():
     _assert_trees_equal(s_a, s_b)
 
 
-def test_probe_parallel_driver_matches_legacy():
+def test_probe_parallel_driver_matches_raw_build():
     from jax.sharding import Mesh
-    from repro.core.probe_parallel import make_probe_parallel_step
+    from repro.core.probe_parallel import build_probe_parallel_step
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
     cfg = MGDConfig(dtheta=1e-2, eta=1.0, mode="central", seed=1)
     p0 = _params()
     batch = {"x": X[None], "y": Y[None]}      # [pods, ...] shard layout
 
-    raw = _legacy(make_probe_parallel_step, _loss, cfg, mesh)
+    raw = build_probe_parallel_step(_loss, cfg, mesh)
     drv = driver("probe_parallel", cfg, _loss, mesh=mesh)
     p_a, p_b = p0, p0
     s_b = drv.init(p0)
@@ -259,20 +250,21 @@ def test_train_mgd_discrete_unchanged_by_redesign(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation hygiene + ambiguous-mix rejection
+# Retired-shim hygiene + ambiguous-mix rejection
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_shims_fire_single_deprecation_warning():
-    from repro.api.driver import _WARNED
-    _WARNED.discard("make_mgd_step")
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        make_mgd_step(_loss, MGDConfig())
-        make_mgd_step(_loss, MGDConfig())
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
-           and "make_mgd_step" in str(w.message)]
-    assert len(dep) == 1, [str(w.message) for w in rec]
+def test_retired_shims_raise_with_registry_pointer():
+    """The PR 3 deprecation shims graduated from warn to raise; the
+    message carries the registry one-liner."""
+    from repro.core import make_analog_step, make_mgd_step
+    from repro.core.probe_parallel import make_probe_parallel_step
+    for shim, algo in [(make_mgd_step, "discrete"),
+                       (make_analog_step, "analog"),
+                       (make_probe_parallel_step, "probe_parallel")]:
+        with pytest.raises(RuntimeError, match="repro.driver") as e:
+            shim(_loss, MGDConfig())
+        assert algo in str(e.value)
 
 
 @pytest.mark.parametrize("build,match", [

@@ -21,7 +21,7 @@ import pytest
 
 import repro
 from repro.api import DriverConfig, driver, replace_step
-from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.core import MGDConfig, build_mgd_step, mgd_init
 from repro.data import tasks
 from repro.hardware import (ChipFarm, ExternalPlant, SimulatedAnalogChip,
                             simulated_chip_farm)
@@ -127,7 +127,7 @@ def test_pair_reads_get_distinct_tags_and_step():
     device can tell the +θ̃ read from the −θ̃ read."""
     device = RecordingDevice()
     plant = ExternalPlant(device)
-    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    step = jax.jit(build_mgd_step(None, _central_cfg(), plant=plant))
     p, s = _params(), mgd_init(_params(), _central_cfg())
     for _ in range(3):
         p, s, _ = step(p, s, BATCH)
@@ -143,7 +143,7 @@ def test_pair_capable_device_single_write_per_pair():
     write): 3 writes/step → 2 writes/step."""
     device = PairDevice()
     plant = ExternalPlant(device)
-    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    step = jax.jit(build_mgd_step(None, _central_cfg(), plant=plant))
     p, s = _params(), mgd_init(_params(), _central_cfg())
     n = 4
     for _ in range(n):
@@ -157,7 +157,7 @@ def test_pair_capable_device_single_write_per_pair():
 def test_legacy_two_arg_device_still_works():
     device = LegacyDevice()
     plant = ExternalPlant(device)
-    step = jax.jit(make_mgd_step(None, _central_cfg(), plant=plant))
+    step = jax.jit(build_mgd_step(None, _central_cfg(), plant=plant))
     p, s = _params(), mgd_init(_params(), _central_cfg())
     p, s, m = step(p, s, BATCH)
     assert np.isfinite(float(m["cost"]))

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init, mse
+from repro.core import MGDConfig, build_mgd_step, mgd_init, mse
 from repro.core import perturbations as pert
 from repro.core.utils import tree_add, tree_axpy
 from repro.kernels import ops, ref
@@ -23,7 +23,7 @@ def _mlp_loss(p, b):
 
 def _run(cfg, steps=36):
     params = mlp_init(jax.random.PRNGKey(0), (2, 2, 1))
-    step = jax.jit(make_mgd_step(
+    step = jax.jit(build_mgd_step(
         _mlp_loss, cfg,
         probe_fn=make_mlp_probe_fn() if cfg.fused else None))
     state = mgd_init(params, cfg)
@@ -57,7 +57,7 @@ def test_fused_bit_identical_mlp(mode, window, eta):
 
 def test_fused_requires_probe_fn_and_valid_config():
     with pytest.raises(ValueError):
-        make_mgd_step(_mlp_loss, MGDConfig(fused=True))
+        build_mgd_step(_mlp_loss, MGDConfig(fused=True))
     with pytest.raises(ValueError):
         MGDConfig(fused=True, ptype="walsh")
     with pytest.raises(ValueError):

@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import (AnalogMGDConfig, MGDConfig, analog_init,
-                        make_analog_step, make_mgd_step, mgd_init, mse)
+                        build_analog_step, build_mgd_step, mgd_init, mse)
 from repro.data import tasks
 from repro.hardware import (ExternalPlant, IdealPlant, NoisyPlant, Plant,
                             PlantMeta, QuantizedPlant, SimulatedAnalogChip,
@@ -40,7 +40,7 @@ def _params():
 
 def _run_mgd(cfg, plant=None, steps=24, loss_fn=_loss, probe_fn=None):
     p = _params()
-    step = jax.jit(make_mgd_step(loss_fn, cfg, probe_fn=probe_fn,
+    step = jax.jit(build_mgd_step(loss_fn, cfg, probe_fn=probe_fn,
                                  plant=plant))
     s = mgd_init(p, cfg)
     cts = []
@@ -83,7 +83,7 @@ def test_ideal_and_sigma0_bit_identical_alg2():
     p0 = {"w": jnp.zeros(3)}
 
     def run(plant):
-        step = jax.jit(make_analog_step(loss, cfg, plant=plant))
+        step = jax.jit(build_analog_step(loss, cfg, plant=plant))
         p, s = p0, analog_init(p0, cfg)
         for _ in range(100):
             p, s, _ = step(p, s, None)
@@ -134,13 +134,13 @@ def test_fused_through_plant_matches_direct_probe_fn(mode):
 
 def test_probe_parallel_accepts_plant():
     from jax.sharding import Mesh
-    from repro.core.probe_parallel import make_probe_parallel_step
+    from repro.core.probe_parallel import build_probe_parallel_step
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
     cfg = MGDConfig(dtheta=1e-2, eta=1.0, mode="central", seed=1)
     p0 = _params()
     batch = {"x": X[None], "y": Y[None]}      # [pods, ...] shard layout
-    step_a = make_probe_parallel_step(_loss, cfg, mesh)
-    step_b = make_probe_parallel_step(None, cfg, mesh,
+    step_a = build_probe_parallel_step(_loss, cfg, mesh)
+    step_b = build_probe_parallel_step(None, cfg, mesh,
                                       plant=IdealPlant(_loss))
     pa, _ = step_a(p0, 0, batch)
     pb, _ = step_b(p0, 0, batch)
@@ -155,18 +155,18 @@ def test_probe_parallel_accepts_plant():
 def test_explicit_plant_rejects_cfg_noise():
     cfg = MGDConfig(cost_noise=0.1)
     with pytest.raises(ValueError, match="explicit plant"):
-        make_mgd_step(_loss, cfg, plant=IdealPlant(_loss))
+        build_mgd_step(_loss, cfg, plant=IdealPlant(_loss))
 
 
 def test_plant_type_checked():
     with pytest.raises(TypeError):
-        make_mgd_step(_loss, MGDConfig(), plant=object())
+        build_mgd_step(_loss, MGDConfig(), plant=object())
 
 
 def test_loss_fn_optional_only_with_plant():
     with pytest.raises(ValueError):
-        make_mgd_step(None, MGDConfig())
-    make_mgd_step(None, MGDConfig(), plant=IdealPlant(_loss))  # fine
+        build_mgd_step(None, MGDConfig())
+    build_mgd_step(None, MGDConfig(), plant=IdealPlant(_loss))  # fine
 
 
 def test_external_requires_cond_free_step():
@@ -176,19 +176,19 @@ def test_external_requires_cond_free_step():
                 MGDConfig(mode="central", tau_theta=4),
                 MGDConfig(mode="central", tau_theta=4, replay=True)):
         with pytest.raises(ValueError, match="external plants"):
-            make_mgd_step(None, bad, plant=plant)
+            build_mgd_step(None, bad, plant=plant)
 
 
 def test_shared_plant_not_mutated_by_probe_fn():
-    """Handing probe_fn to make_mgd_step must not stick it onto a plant
+    """Handing probe_fn to build_mgd_step must not stick it onto a plant
     shared with another optimizer (and conflicting probe_fns error)."""
     plant = IdealPlant(_loss)
     pf = make_mlp_probe_fn()
-    make_mgd_step(None, MGDConfig(fused=True), probe_fn=pf, plant=plant)
+    build_mgd_step(None, MGDConfig(fused=True), probe_fn=pf, plant=plant)
     assert plant.probe_fn is None
     plant2 = IdealPlant(_loss, probe_fn=pf)
     with pytest.raises(ValueError, match="probe_fn"):
-        make_mgd_step(None, MGDConfig(), probe_fn=make_mlp_probe_fn(),
+        build_mgd_step(None, MGDConfig(), probe_fn=make_mlp_probe_fn(),
                       plant=plant2)
 
 
@@ -245,7 +245,7 @@ def test_sub_lsb_probes_invisible_when_probes_quantized():
     assert plant.lsb > 4e-2
     cfg = MGDConfig(dtheta=1e-3, eta=1.0, mode="central", seed=0)
     p0 = plant.write_params(_params(), step=0)
-    step = jax.jit(make_mgd_step(None, cfg, plant=plant))
+    step = jax.jit(build_mgd_step(None, cfg, plant=plant))
     s = mgd_init(p0, cfg)
     _, _, m = step(p0, s, BATCH)
     assert float(m["c_tilde"]) == 0.0
@@ -263,7 +263,7 @@ def test_external_plant_trains_through_opaque_interface():
     cfg = MGDConfig(dtheta=2e-2, eta=0.5, mode="central", seed=0)
     p = _params()
     s = mgd_init(p, cfg)
-    step = jax.jit(make_mgd_step(None, cfg, plant=plant))
+    step = jax.jit(build_mgd_step(None, cfg, plant=plant))
     costs = []
     for _ in range(60):
         p, s, m = step(p, s, BATCH)

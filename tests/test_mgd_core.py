@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.core import MGDConfig, build_mgd_step, mgd_init
 from repro.core.forward_grad import (forward_gradient, gradient_angle,
                                      true_gradient)
 from repro.core.utils import tree_size
@@ -21,7 +21,7 @@ def quad_loss(p, batch):
 
 def run(cfg, params, steps, batch=None):
     state = mgd_init(params, cfg)
-    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    step = jax.jit(build_mgd_step(quad_loss, cfg))
     for _ in range(steps):
         params, state, metrics = step(params, state, batch)
     return params, state, metrics
@@ -94,7 +94,7 @@ def test_gradient_angle_convergence():
     g_true = true_gradient(quad_loss, P0, None)
     cfg = MGDConfig(dtheta=1e-4, eta=0.0, tau_theta=10**9)
     state = mgd_init(P0, cfg)
-    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    step = jax.jit(build_mgd_step(quad_loss, cfg))
     p = P0
     angles = []
     for t in range(2000):
@@ -114,7 +114,7 @@ def test_forward_gradient_oracle_is_dtheta_limit():
     cfg = MGDConfig(dtheta=1e-5, eta=0.0, tau_theta=10**9, mode="central")
     state = mgd_init(P0, cfg)
     state = state._replace(step=jnp.asarray(5, jnp.int32))
-    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    step = jax.jit(build_mgd_step(quad_loss, cfg))
     _, state, _ = step(P0, state, None)
     for k in fg:
         np.testing.assert_allclose(np.asarray(state.g[k]),
@@ -140,7 +140,7 @@ def test_temporal_batching_equals_spatial():
     cfg = MGDConfig(ptype="sequential", dtheta=1e-4, eta=0.0,
                     tau_theta=10**9)
     state = mgd_init(params, cfg)
-    step = jax.jit(make_mgd_step(loss, cfg))
+    step = jax.jit(build_mgd_step(loss, cfg))
     p = params
     for i in range(4 * n):
         batch = (xs[i // n][None], ys[i // n][None])
@@ -162,7 +162,7 @@ def test_momentum_accelerates_quadratic():
 def test_update_only_every_tau_theta():
     cfg = MGDConfig(dtheta=1e-3, eta=0.1, tau_theta=5)
     state = mgd_init(P0, cfg)
-    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    step = jax.jit(build_mgd_step(quad_loss, cfg))
     p = P0
     for i in range(5):
         p_prev = p
@@ -182,7 +182,7 @@ def test_replay_tau1_keeps_replay_branch_and_state_structure():
                     staleness=1, seed=0)
     state = mgd_init(P0, cfg)
     assert state.replay_c is not None
-    step = jax.jit(make_mgd_step(quad_loss, cfg))
+    step = jax.jit(build_mgd_step(quad_loss, cfg))
     params, new_state, _ = step(P0, state, None)
     # same pytree structure in and out — scan-compatible
     assert jax.tree_util.tree_structure((P0, state)) == \

@@ -363,6 +363,39 @@ def test_mgd006_fence_in_outer_block_counts(tmp_path):
     assert not res.findings
 
 
+def test_mgd006_unfenced_param_swap_flagged(tmp_path):
+    """The PR 10 extension: a serving-tier store.publish in
+    fence-binding code is a sync boundary — publishing with plant
+    writes in flight serves a tree the device never held."""
+    res = lint_snippet(
+        tmp_path, "src/repro/serving/m.py",
+        """\
+        class Trimmer:
+            def publish_bad(self):
+                self.fence
+                return self._store.publish(self._params)
+
+            def publish_good(self):
+                self.fence()
+                return self._store.publish(self._params)
+        """, select=["MGD006"])
+    assert len(res.findings) == 1
+    assert res.findings[0].symbol == "Trimmer.publish_bad"
+    assert "parameter swap" in res.findings[0].message
+
+
+def test_mgd006_non_store_publish_not_flagged(tmp_path):
+    """publish on something that is not a parameter store (e.g. a
+    message bus) is not a swap boundary."""
+    res = lint_snippet(
+        tmp_path, "src/repro/serving/m.py",
+        """\
+        def announce(bus, fence, msg):
+            bus.publish(msg)
+        """, select=["MGD006"])
+    assert not res.findings
+
+
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------

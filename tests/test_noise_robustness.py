@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (AnalogMGDConfig, MGDConfig, analog_init,
-                        make_analog_step, make_mgd_epoch, make_mgd_step,
+                        build_analog_step, build_mgd_step, make_mgd_epoch,
                         mgd_init, mse)
 from repro.core.noise import (defective_sigmoid, ideal_defects,
                               sample_defects)
@@ -71,7 +71,7 @@ def test_longer_tau_theta_suppresses_update_noise():
     end-to-end XOR demonstration of this is plateau-dominated at small
     scale; we assert the magnitude mechanism directly.)"""
     import jax as _jax
-    from repro.core import make_mgd_step as _mk, mgd_init as _init
+    from repro.core import build_mgd_step as _mk, mgd_init as _init
     from repro.core.utils import tree_norm, tree_sub
     x, y = tasks.xor_dataset()
     batch = {"x": x, "y": y}
@@ -126,7 +126,7 @@ def test_analog_algorithm_trains_quadratic():
     cfg = AnalogMGDConfig(dtheta=1e-2, eta=1e-3, tau_theta=10.0,
                           tau_hp=100.0)
     state = analog_init(params, cfg)
-    step = jax.jit(make_analog_step(loss, cfg))
+    step = jax.jit(build_analog_step(loss, cfg))
     for _ in range(20000):
         params, state, m = step(params, state, None)
     assert float(loss(params, None)) < 0.5

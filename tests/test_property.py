@@ -10,7 +10,7 @@ pytest.importorskip(
            "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import MGDConfig, make_mgd_step, mgd_init
+from repro.core import MGDConfig, build_mgd_step, mgd_init
 from repro.core import perturbations as pert
 from repro.core.forward_grad import true_gradient
 from repro.core.utils import (tree_axpy, tree_dot, tree_norm, tree_scale,
@@ -57,7 +57,7 @@ def test_fd_mode_recovers_linear_gradient_exactly(w):
     cfg = MGDConfig(ptype="sequential", dtheta=0.25, eta=0.0,
                     tau_theta=10**9)
     state = mgd_init(params, cfg)
-    step = jax.jit(make_mgd_step(loss, cfg))
+    step = jax.jit(build_mgd_step(loss, cfg))
     p = params
     for _ in range(len(w)):
         p, state, _ = step(p, state, None)
@@ -79,7 +79,7 @@ def test_rademacher_estimator_unbiased_linear(seed):
     cfg = MGDConfig(dtheta=0.1, eta=0.0, tau_theta=10**9, seed=seed,
                     probes=64, mode="central")
     state = mgd_init(params, cfg)
-    step = jax.jit(make_mgd_step(loss, cfg))
+    step = jax.jit(build_mgd_step(loss, cfg))
     _, state, _ = step(params, state, None)
     err = float(jnp.max(jnp.abs(state.g["w"] - g_true)))
     # 64 probes → s.e. ≈ |g|·√(P−1)/√64 ≈ 0.8; generous bound

@@ -47,7 +47,7 @@ def test_mgd_vs_backprop_direction_agreement():
     """On the same batch, the expected MGD update direction must positively
     correlate with the true gradient (sanity of the whole stack)."""
     from repro.core.forward_grad import true_gradient
-    from repro.core import make_mgd_step, mgd_init
+    from repro.core import build_mgd_step, mgd_init
     from repro.core.utils import tree_dot
 
     cfg = get_smoke_config("mistral-nemo-12b")
@@ -57,7 +57,7 @@ def test_mgd_vs_backprop_direction_agreement():
     mgd_cfg = MGDConfig(dtheta=1e-3, eta=0.0, tau_theta=10**9,
                         mode="central", probes=16)
     state = mgd_init(params, mgd_cfg)
-    step = jax.jit(make_mgd_step(loss_fn, mgd_cfg))
+    step = jax.jit(build_mgd_step(loss_fn, mgd_cfg))
     _, state, _ = step(params, state, batch)
     g_true = true_gradient(loss_fn, params, batch)
     cos = float(tree_dot(state.g, g_true))

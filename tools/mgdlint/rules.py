@@ -687,25 +687,32 @@ class B:
 _SYNC_ATTR_CALLS = {"save"}            # ckpt.save / checkpoint.save
 _SYNC_MODULE_HINTS = ("ckpt", "checkpoint")
 _SYNC_NAME_CALLS = {"_recalibrate", "eval_fn"}
+# serving-tier parameter swap: <store>.publish(...) installs the trainer's
+# tree as the serving snapshot — publishing with plant writes still in
+# flight would serve a tree the device never held (PR 10)
+_SWAP_ATTR_CALLS = {"publish"}
+_SWAP_MODULE_HINTS = ("store",)
 
 
 @register
 class FenceBeforeSync(Rule):
     """In plant-driving code (any function that binds a plant
-    ``fence``), every checkpoint save / recalibration / eval callsite
-    must have a ``fence()`` call among its preceding statements: a
+    ``fence``), every checkpoint save / recalibration / eval callsite —
+    and every serving-tier parameter swap (``<store>.publish``) — must
+    have a ``fence()`` call among its preceding statements: a
     double-buffered farm leaves parameter writes in flight between
     steps, and a state-dependent boundary that runs with writes pending
-    breaks bit-exact resume (PR 7)."""
+    breaks bit-exact resume (PR 7) or publishes a parameter tree the
+    device never held (PR 10)."""
 
     code = "MGD006"
-    title = "fence before checkpoint/recal/eval"
+    title = "fence before checkpoint/recal/eval/param-swap"
     rationale = (
         "ChipFarm(pipeline=True) overlaps step N+1's writes with step "
-        "N's compute; checkpoints, evals and recalibration read or "
-        "rewrite device state and must not race an in-flight write. "
-        "train_mgd fences first — every new boundary callsite must "
-        "too.")
+        "N's compute; checkpoints, evals, recalibration and serving "
+        "parameter swaps read or rewrite device state and must not "
+        "race an in-flight write. train_mgd and OnlineTrimmer fence "
+        "first — every new boundary callsite must too.")
     fixture_path = "src/repro/training/fixture_mod.py"
     fixture_bad = """\
 from . import checkpoint as ckpt
@@ -770,6 +777,12 @@ def train(plant, params, state, done):
             base = (dotted_name(call.func.value) or "").lower()
             if any(h in base for h in _SYNC_MODULE_HINTS):
                 return f"checkpoint save `{dotted_name(call.func)}`"
+            return None
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _SWAP_ATTR_CALLS:
+            base = (dotted_name(call.func.value) or "").lower()
+            if any(h in base for h in _SWAP_MODULE_HINTS):
+                return f"parameter swap `{dotted_name(call.func)}`"
             return None
         name = dotted_name(call.func)
         if name in _SYNC_NAME_CALLS:
